@@ -1,0 +1,63 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts (single source of
+truth: the CellReport JSONs under artifacts/dryrun)."""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional
+
+from repro.core import TPU_V5E, analyze, ascii_plot
+from repro.core.report import (CellReport, dryrun_table, load_reports,
+                               roofline_table)
+from repro.core.ridgeline import WorkUnit
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+
+def reports(mesh: Optional[str] = None, variant: str = "baseline"
+            ) -> List[CellReport]:
+    reps = [r for r in load_reports(ARTIFACTS) if r.variant == variant]
+    if mesh:
+        reps = [r for r in reps if r.mesh == mesh]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    reps.sort(key=lambda r: (r.arch, order.get(r.shape, 9), r.mesh))
+    return reps
+
+
+def variants_of(arch: str, shape: str, mesh: str) -> List[CellReport]:
+    return [r for r in load_reports(ARTIFACTS)
+            if (r.arch, r.shape, r.mesh) == (arch, shape, mesh)]
+
+
+def reports_all() -> List[CellReport]:
+    return load_reports(ARTIFACTS)
+
+
+def emit_roofline_md(mesh: str = "16x16") -> str:
+    return roofline_table(reports(mesh))
+
+
+def emit_dryrun_md(mesh: str) -> str:
+    return dryrun_table(reports(mesh))
+
+
+def emit_ridgeline_plot(mesh: str = "16x16", shape: str = "train_4k") -> str:
+    reps = [r for r in reports(mesh) if r.shape == shape]
+    analyses = [analyze(WorkUnit(r.arch, r.flops, r.mem_bytes, r.wire_bytes),
+                        TPU_V5E) for r in reps]
+    return ascii_plot(analyses, TPU_V5E)
+
+
+def summary_stats(mesh: str = "16x16") -> Dict[str, float]:
+    reps = reports(mesh)
+    bottl: Dict[str, int] = {}
+    for r in reps:
+        bottl[r.bottleneck] = bottl.get(r.bottleneck, 0) + 1
+    return {
+        "cells": len(reps),
+        "bottleneck_counts": bottl,
+        "median_peak_fraction": sorted(
+            r.peak_fraction for r in reps)[len(reps) // 2] if reps else 0.0,
+        "max_mem_gib": max((r.peak_memory_per_device for r in reps),
+                           default=0) / 2**30,
+    }

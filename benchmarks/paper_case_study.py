@@ -1,0 +1,131 @@
+"""Paper §III case study: DLRM MLP on CLX — Figs 4a, 4b, 4c, 6a, 6b.
+
+Each ``fig*`` function returns (rows, derived-claims) where rows are the
+figure's data points.  Claims are checked against the paper's stated
+numbers; ``benchmarks.run`` prints them as CSV and asserts them, and
+EXPERIMENTS.md §Paper-validation is generated from here.
+
+Two term sources:
+  * analytic — the paper's own accounting (models/mlp_dlrm.analytic_work_unit)
+  * compiled — FLOPs/bytes of the real jitted train step via cost_analysis
+    (single CPU device; network volume stays analytic = 2·params·4B, the
+    ring all-reduce wire bytes the paper assumes)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CLX, Resource, WorkUnit, analyze, ascii_plot, svg_plot
+from repro.models.mlp_dlrm import analytic_work_unit
+
+WIDTH, LAYERS = 4096, 8
+BATCHES = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def mlp_unit(batch: int, per_layer: bool = True) -> WorkUnit:
+    layers = 1 if per_layer else LAYERS
+    f, bm, bn = analytic_work_unit(batch, WIDTH, layers)
+    return WorkUnit(f"mlp_b{batch}", f, bm, bn)
+
+
+def fig4a_intensity() -> Tuple[List[Dict], Dict]:
+    rows = [{"batch": b,
+             "arithmetic_intensity": mlp_unit(b).arithmetic_intensity,
+             "clx_ridge": CLX.ridge_arithmetic}
+            for b in BATCHES]
+    crossing = min(b for b in BATCHES
+                   if mlp_unit(b).arithmetic_intensity >= CLX.ridge_arithmetic)
+    return rows, {"ridge_crossing_batch": crossing, "paper_claim": 32}
+
+
+def fig4b_roofline() -> Tuple[List[Dict], Dict]:
+    from repro.core import roofline
+    rows = []
+    for b in BATCHES:
+        w = mlp_unit(b)
+        pt = roofline.point(w.name, w.flops, w.mem_bytes, CLX)
+        rows.append({"batch": b, "intensity": pt.intensity,
+                     "attainable_gflops": pt.attainable_flops / 1e9,
+                     "bound": pt.bound})
+    first_compute = min(r["batch"] for r in rows if r["bound"] == "compute")
+    return rows, {"first_compute_bound_batch": first_compute,
+                  "paper_claim": 32}
+
+
+def fig4c_allreduce_vs_compute() -> Tuple[List[Dict], Dict]:
+    rows = []
+    for b in BATCHES:
+        a = analyze(mlp_unit(b, per_layer=False), CLX)
+        rows.append({"batch": b, "t_compute_ms": a.t_compute * 1e3,
+                     "t_allreduce_ms": a.t_network * 1e3})
+    # exact analytic crossover: 6 B* W^2 L / C = 8 W^2 L / N
+    #   -> B* = (8/6) * C/N = 4/3 * k*  (= 466.7 on CLX)
+    b_star = (8.0 / 6.0) * CLX.ridge_network
+    # paper (Fig 4c): "up to batch size 512 ... more time to do the
+    # all-reduce"; it also places 512 "on the ridgeline" (xy=384 vs
+    # k*=350, ~10% above) — so the claim is approximate by construction.
+    # We accept the exact crossover within 10% of 512.
+    return rows, {"crossover_batch": b_star,
+                  "within_10pct_of_512": abs(b_star / 512 - 1) < 0.12,
+                  "paper_claim": 512}
+
+
+def fig6_ridgeline() -> Tuple[List[Dict], Dict]:
+    analyses = [analyze(mlp_unit(b), CLX) for b in BATCHES if b >= 256]
+    rows = [{"batch": int(a.work.name.split("_b")[1]),
+             "x_mem_intensity": a.x, "y_arith_intensity": a.y,
+             "region": a.bottleneck.value,
+             "projected_runtime_ms": analyze(
+                 mlp_unit(int(a.work.name.split('_b')[1]), per_layer=False),
+                 CLX).runtime * 1e3}
+            for a in analyses]
+    derived = {
+        "b256": rows[0]["region"], "b512": rows[1]["region"],
+        "b1024": rows[2]["region"],
+        "paper_claim": "256:network 512:~ridge 1024:compute",
+        "xy_at_512": analyses[1].work.network_intensity,
+        "k_star": CLX.ridge_network,
+    }
+    return rows, derived
+
+
+def compiled_terms(batch: int) -> Dict[str, float]:
+    """F/B_M from the real compiled train step (1 CPU device)."""
+    from repro.configs import get_config
+    from repro.optim.optimizer import SGD
+    from repro.train.loop import (TrainStepConfig, build_train_step,
+                                  init_train_state)
+    cfg = get_config("dlrm-mlp").replace(compute_dtype=jnp.float32)
+    opt = SGD(learning_rate=1e-2)
+    step = build_train_step(cfg, opt, TrainStepConfig())
+    state_abs = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, opt),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch_abs = {"features": jax.ShapeDtypeStruct((batch, WIDTH), jnp.float32),
+                 "click": jax.ShapeDtypeStruct((batch,), jnp.float32)}
+    compiled = jax.jit(step).lower(state_abs, batch_abs).compile()
+    cost = compiled.cost_analysis()
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state_abs.params))
+    return {"flops": float(cost["flops"]),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "analytic_flops": 6.0 * batch * WIDTH * WIDTH * LAYERS,
+            "net_bytes": 2.0 * 4.0 * n_params}
+
+
+def write_plots(outdir: str) -> List[str]:
+    import os
+    os.makedirs(outdir, exist_ok=True)
+    analyses = [analyze(mlp_unit(b), CLX) for b in BATCHES if b >= 64]
+    paths = []
+    p = os.path.join(outdir, "fig6_ridgeline.svg")
+    with open(p, "w") as f:
+        f.write(svg_plot(analyses, CLX))
+    paths.append(p)
+    p = os.path.join(outdir, "fig6_ridgeline.txt")
+    with open(p, "w") as f:
+        f.write(ascii_plot(analyses, CLX))
+    paths.append(p)
+    return paths

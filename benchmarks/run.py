@@ -1,0 +1,101 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's key
+claim, checked against the paper) and writes figure artifacts under
+``artifacts/figures``.  Paper-claim mismatches EXIT NONZERO.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> int:
+    from benchmarks import arch_table, paper_case_study as cs
+
+    rows = []
+    ok = True
+
+    # --- paper §III case study -------------------------------------------------
+    (r4a, d4a), us = _timed(cs.fig4a_intensity)
+    rows.append(("fig4a_intensity", us,
+                 f"ridge_crossing_batch={d4a['ridge_crossing_batch']}"))
+    ok &= d4a["ridge_crossing_batch"] == d4a["paper_claim"]
+
+    (r4b, d4b), us = _timed(cs.fig4b_roofline)
+    rows.append(("fig4b_roofline", us,
+                 f"first_compute_bound_batch={d4b['first_compute_bound_batch']}"))
+    ok &= d4b["first_compute_bound_batch"] == d4b["paper_claim"]
+
+    (r4c, d4c), us = _timed(cs.fig4c_allreduce_vs_compute)
+    rows.append(("fig4c_allreduce", us,
+                 f"crossover_batch={d4c['crossover_batch']:.0f}_vs_paper_512"))
+    ok &= d4c["within_10pct_of_512"]
+
+    (r6, d6), us = _timed(cs.fig6_ridgeline)
+    rows.append(("fig6_ridgeline", us,
+                 f"b256={d6['b256']};b1024={d6['b1024']};"
+                 f"xy512={d6['xy_at_512']:.0f};k*={d6['k_star']:.0f}"))
+    ok &= d6["b256"] == "network" and d6["b1024"] == "compute"
+
+    terms, us = _timed(cs.compiled_terms, 512)
+    ratio = terms["flops"] / terms["analytic_flops"]
+    rows.append(("compiled_mlp_b512", us,
+                 f"hlo_vs_analytic_flops={ratio:.3f}"))
+    ok &= 0.9 < ratio < 1.3   # compiled step ~= 3-GEMM accounting (+optimizer)
+
+    figdir = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "figures")
+    paths, us = _timed(cs.write_plots, figdir)
+    rows.append(("fig6_plots_written", us, ";".join(
+        os.path.basename(p) for p in paths)))
+
+    # --- arch zoo roofline tables (from dry-run artifacts, if present) ----------
+    stats, us = _timed(arch_table.summary_stats, "16x16")
+    if stats["cells"]:
+        rows.append(("arch_roofline_16x16", us,
+                     f"cells={stats['cells']};"
+                     f"bottlenecks={stats['bottleneck_counts']};"
+                     f"median_peak_frac={stats['median_peak_fraction']:.3f}"))
+        stats2, us2 = _timed(arch_table.summary_stats, "2x16x16")
+        rows.append(("arch_roofline_2x16x16", us2,
+                     f"cells={stats2['cells']}"))
+
+    # --- micro: core model + kernels ---------------------------------------------
+    from repro.core import CLX, WorkUnit, analyze
+    w = WorkUnit("probe", 1e12, 1e9, 1e8)
+    _, us = _timed(lambda: [analyze(w, CLX) for _ in range(1000)])
+    rows.append(("ridgeline_analyze_x1000", us, "core-model-throughput"))
+
+    import jax, jax.numpy as jnp
+    from repro.kernels import ops, ref
+    a = jax.random.normal(jax.random.PRNGKey(0), (512, 512))
+    b = jax.random.normal(jax.random.PRNGKey(1), (512, 512))
+    ops.matmul(a, b)   # compile
+    _, us = _timed(lambda: jax.block_until_ready(ops.matmul(a, b)))
+    rows.append(("pallas_matmul_512_interpret", us, "interpret-mode"))
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 512, 4, 64))
+    kk = jax.random.normal(jax.random.PRNGKey(3), (1, 512, 2, 64))
+    ops.flash_attention(q, kk, kk)
+    _, us = _timed(lambda: jax.block_until_ready(ops.flash_attention(q, kk, kk)))
+    rows.append(("pallas_flash_512_interpret", us, "interpret-mode"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if not ok:
+        print("PAPER-CLAIM MISMATCH", file=sys.stderr)
+        return 1
+    print("# all paper claims reproduced", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Ridgeline core: the paper's 2D distributed roofline model.
+
+Public API:
+  HardwareSpec / TPU_V5E / CLX — machine resource books
+  WorkUnit / analyze / RidgelineAnalysis — the model itself
+  classify_by_quadrant / classify_by_times — the two (equivalent) classifiers
+  parse_collectives / analyze_compiled — HLO-derived work units
+  CellReport / roofline_table — dry-run artifact schema + report emission
+"""
+from repro.core.hardware import CLX, TPU_V5E, HardwareSpec, get_hardware
+from repro.core.hlo_analysis import (CollectiveSummary, StepCosts,
+                                     analyze_compiled, parse_collectives)
+from repro.core.report import (CellReport, dryrun_table, load_reports,
+                               make_cell_report, roofline_table)
+from repro.core.ridgeline import (Resource, RidgelineAnalysis, WorkUnit,
+                                  analyze, analyze_multilink, ascii_plot,
+                                  classify_by_quadrant, classify_by_times,
+                                  region_at, svg_plot)
+from repro.core import roofline
+
+__all__ = [
+    "CLX", "TPU_V5E", "HardwareSpec", "get_hardware",
+    "CollectiveSummary", "StepCosts", "analyze_compiled", "parse_collectives",
+    "CellReport", "dryrun_table", "load_reports", "make_cell_report",
+    "roofline_table",
+    "Resource", "RidgelineAnalysis", "WorkUnit", "analyze",
+    "analyze_multilink", "ascii_plot", "classify_by_quadrant",
+    "classify_by_times", "region_at", "svg_plot", "roofline",
+]

@@ -1,0 +1,96 @@
+"""Hardware resource book for Ridgeline analysis.
+
+A ``HardwareSpec`` carries exactly the three bandwidth-like quantities the
+Ridgeline model (paper §II) needs: peak compute throughput, memory bandwidth,
+and network bandwidth — all *per compute entity* (chip / socket).  Multi-level
+networks (ICI within a pod, DCI between pods) are expressed as a dict of named
+network links so the multi-pod analysis can take per-axis terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip resource peaks used as Ridgeline balance points.
+
+    Attributes:
+      name: human-readable identifier.
+      peak_flops: peak compute throughput, FLOP/s (in the dtype of interest).
+      hbm_bw: main-memory bandwidth, bytes/s.
+      net_bw: primary network bandwidth, bytes/s per chip (for TPU this is the
+        per-link ICI bandwidth; collectives ride multiple links but the
+        per-device wire-byte accounting in ``hlo_analysis`` is normalized to a
+        single link so the division is consistent).
+      extra_links: optional named slower links (e.g. ``{"dci": 25e9}``) for
+        multi-level network analysis; keys are mesh-axis tags.
+      vmem_bytes: fast scratchpad capacity per core (VMEM for TPU), used by
+        kernel block-shape planning, not by the Ridgeline itself.
+    """
+
+    name: str
+    peak_flops: float
+    hbm_bw: float
+    net_bw: float
+    extra_links: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB (v5e VMEM per core)
+
+    # ---- machine balance points (paper §II, Fig. 2) -------------------------
+    @property
+    def ridge_arithmetic(self) -> float:
+        """y* = Peak / HBM_bw: the classic roofline ridge (FLOP/mem-byte)."""
+        return self.peak_flops / self.hbm_bw
+
+    @property
+    def ridge_memory(self) -> float:
+        """x* = HBM_bw / Net_bw: memory-network balance (mem-byte/net-byte)."""
+        return self.hbm_bw / self.net_bw
+
+    @property
+    def ridge_network(self) -> float:
+        """k* = Peak / Net_bw: compute-network balance (FLOP/net-byte).
+
+        The hyperbola x*y = k* is the straight separation line (in log-log)
+        of the upper-left quadrant (paper Fig. 2d).
+        """
+        return self.peak_flops / self.net_bw
+
+    def bandwidth_for(self, link: str | None = None) -> float:
+        if link is None or link == "ici" or link == "net":
+            return self.net_bw
+        return float(self.extra_links[link])
+
+
+# --- Presets -----------------------------------------------------------------
+
+#: TPU v5e — the target deployment chip for this framework.  Constants per the
+#: brief: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.  The multi-pod
+#: ``pod`` axis rides data-center interconnect, modelled at 25 GB/s/chip.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    net_bw=50e9,
+    extra_links={"pod": 25e9},
+)
+
+#: Intel Xeon Cascade Lake socket exactly as in the paper's case study (§III):
+#: 4.2 TF/s FP32, 105 GB/s DRAM, 12 GB/s network per socket.
+CLX = HardwareSpec(
+    name="clx",
+    peak_flops=4.2e12,
+    hbm_bw=105e9,
+    net_bw=12e9,
+    vmem_bytes=36 * 1024 * 1024,  # LLC, unused in analysis
+)
+
+PRESETS: Dict[str, HardwareSpec] = {"tpu_v5e": TPU_V5E, "clx": CLX}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    try:
+        return PRESETS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown hardware preset {name!r}; have {sorted(PRESETS)}") from e

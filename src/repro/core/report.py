@@ -1,0 +1,184 @@
+"""Ridgeline reports: the per-cell artifact schema and markdown emitters.
+
+A *cell* = (architecture, input shape, mesh).  ``launch/dryrun.py`` produces
+one ``CellReport`` JSON per cell; everything in EXPERIMENTS.md §Dry-run,
+§Roofline and §Perf is generated from these artifacts via
+``benchmarks/arch_table.py`` so the numbers in the doc are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from repro.core.hardware import HardwareSpec, get_hardware
+from repro.core.hlo_analysis import StepCosts
+from repro.core.ridgeline import RidgelineAnalysis, Resource, WorkUnit, analyze
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str                      # train_4k / prefill_32k / decode_32k / long_500k
+    mesh: str                       # "16x16" | "2x16x16"
+    step_kind: str                  # train_step | serve_step
+    num_devices: int
+    hardware: str
+    # per-device terms
+    flops: float
+    mem_bytes: float
+    wire_bytes: float
+    wire_bytes_by_kind: Dict[str, float]
+    peak_memory_per_device: float
+    # model-level accounting
+    model_flops: float              # 6*N*D (dense) or 6*N_active*D (MoE), total
+    params_total: float
+    params_active: float
+    tokens_per_step: float
+    # derived (filled by finalize)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_network: float = 0.0
+    bottleneck: str = ""
+    runtime: float = 0.0
+    peak_fraction: float = 0.0
+    useful_flops_ratio: float = 0.0   # MODEL_FLOPS / (per-dev flops * devices)
+    i_arithmetic: float = 0.0
+    i_memory: float = 0.0
+    i_network: float = 0.0
+    notes: str = ""
+    variant: str = "baseline"       # baseline | <optimization tag>
+    wall_compile_s: float = 0.0
+    #: TPU-corrected peak memory: raw minus half the CPU backend's bf16->f32
+    #: upcast buffers (float-normalization artifact; see hlo_analysis)
+    peak_memory_corrected: float = 0.0
+
+    def finalize(self, hw: HardwareSpec) -> "CellReport":
+        wu = WorkUnit(f"{self.arch}/{self.shape}", self.flops, self.mem_bytes,
+                      self.wire_bytes)
+        a = analyze(wu, hw)
+        self.t_compute, self.t_memory, self.t_network = (
+            a.t_compute, a.t_memory, a.t_network)
+        self.bottleneck = a.bottleneck.value
+        self.runtime = a.runtime
+        self.peak_fraction = a.peak_fraction
+        self.i_arithmetic = a.y
+        self.i_memory = a.x
+        self.i_network = wu.network_intensity
+        total_hlo = self.flops * self.num_devices
+        self.useful_flops_ratio = (
+            self.model_flops / total_hlo if total_hlo else 0.0)
+        return self
+
+    def analysis(self, hw: Optional[HardwareSpec] = None) -> RidgelineAnalysis:
+        hw = hw or get_hardware(self.hardware)
+        return analyze(
+            WorkUnit(f"{self.arch}/{self.shape}@{self.mesh}",
+                     self.flops, self.mem_bytes, self.wire_bytes), hw)
+
+    # ---- persistence ---------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "CellReport":
+        d = json.loads(text)
+        known = {f.name for f in dataclasses.fields(CellReport)}
+        return CellReport(**{k: v for k, v in d.items() if k in known})
+
+    def save(self, directory: str) -> str:
+        os.makedirs(directory, exist_ok=True)
+        path = os.path.join(
+            directory, f"{self.arch}__{self.shape}__{self.mesh}__{self.variant}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.to_json())
+        os.replace(tmp, path)
+        return path
+
+
+def load_reports(directory: str) -> List[CellReport]:
+    out: List[CellReport] = []
+    if not os.path.isdir(directory):
+        return out
+    for fn in sorted(os.listdir(directory)):
+        if fn.endswith(".json"):
+            with open(os.path.join(directory, fn)) as f:
+                out.append(CellReport.from_json(f.read()))
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}µs"
+    if x < 1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def make_cell_report(
+    *, arch: str, shape: str, mesh: str, step_kind: str,
+    costs: StepCosts, hw: HardwareSpec, model_flops: float,
+    params_total: float, params_active: float, tokens_per_step: float,
+    variant: str = "baseline", notes: str = "", wall_compile_s: float = 0.0,
+) -> CellReport:
+    rep = CellReport(
+        arch=arch, shape=shape, mesh=mesh, step_kind=step_kind,
+        num_devices=costs.num_devices, hardware=hw.name,
+        flops=costs.flops, mem_bytes=costs.mem_bytes,
+        wire_bytes=costs.wire_bytes,
+        wire_bytes_by_kind={k: b for k, (c, b) in costs.collectives.by_kind().items()},
+        peak_memory_per_device=costs.peak_memory_per_device,
+        peak_memory_corrected=max(
+            0.0, costs.peak_memory_per_device - costs.float_norm_overhead / 2),
+        model_flops=model_flops, params_total=params_total,
+        params_active=params_active, tokens_per_step=tokens_per_step,
+        variant=variant, notes=notes, wall_compile_s=wall_compile_s,
+    )
+    return rep.finalize(hw)
+
+
+ROOFLINE_HEADER = (
+    "| arch | shape | mesh | step | t_compute | t_memory | t_network | "
+    "bottleneck | bound runtime | peak frac | useful/HLO | bytes/dev | notes |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def roofline_row(r: CellReport) -> str:
+    return (
+        f"| {r.arch} | {r.shape} | {r.mesh} | {r.step_kind} | "
+        f"{_fmt_s(r.t_compute)} | {_fmt_s(r.t_memory)} | {_fmt_s(r.t_network)} | "
+        f"**{r.bottleneck}** | {_fmt_s(r.runtime)} | {100 * r.peak_fraction:.1f}% | "
+        f"{r.useful_flops_ratio:.2f} | "
+        f"{(r.peak_memory_corrected or r.peak_memory_per_device) / 2**30:.2f} GiB | "
+        f"{r.notes} |"
+    )
+
+
+def roofline_table(reports: Sequence[CellReport]) -> str:
+    rows = [ROOFLINE_HEADER]
+    rows += [roofline_row(r) for r in reports]
+    return "\n".join(rows)
+
+
+def dryrun_table(reports: Sequence[CellReport]) -> str:
+    head = (
+        "| arch | shape | mesh | devices | HLO GFLOPs/dev | HBM GB/dev | "
+        "wire GB/dev | peak mem GiB/dev | collectives |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    rows = [head]
+    for r in reports:
+        kinds = ", ".join(
+            f"{k}:{v / 2**30:.2f}GiB" for k, v in sorted(r.wire_bytes_by_kind.items()))
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.num_devices} | "
+            f"{r.flops / 1e9:.1f} | {r.mem_bytes / 1e9:.2f} | "
+            f"{r.wire_bytes / 1e9:.3f} | {r.peak_memory_per_device / 2**30:.2f} | "
+            f"{kinds or '-'} |")
+    return "\n".join(rows)

@@ -1,0 +1,368 @@
+"""The Ridgeline model (paper §II) — the core contribution, reimplemented.
+
+Given a *work unit* characterized by
+
+    F    FLOPs
+    B_M  memory bytes accessed
+    B_N  bytes moved over the network
+
+and a machine (``HardwareSpec``), the Ridgeline places the work unit on the
+plane (x = I_M = B_M/B_N, y = I_A = F/B_M) and classifies its bottleneck by
+the quadrant/hyperbola construction of Fig. 2:
+
+  * x < x*, y < y*            -> NETWORK   (lower-left)
+  * x > x*, y < y*            -> MEMORY    (lower-right)
+  * x > x*, y > y*            -> COMPUTE   (upper-right)
+  * x < x*, y > y*            -> x·y ≶ k*: NETWORK if below, COMPUTE if above
+
+with x* = HBM/NET, y* = PEAK/HBM, k* = PEAK/NET.  The classification is
+*provably equivalent* to the argmax of the three resource times
+
+    t_C = F / PEAK,  t_M = B_M / HBM,  t_N = B_N / NET
+
+(see ``tests/test_ridgeline.py`` for the hypothesis property test), and the
+projected runtime at the bound is ``max(t_C, t_M, t_N)`` (paper §III: divide
+the dominant traffic by its bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
+
+from repro.core.hardware import HardwareSpec
+
+
+class Resource(enum.Enum):
+    COMPUTE = "compute"
+    MEMORY = "memory"
+    NETWORK = "network"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkUnit:
+    """The three Ridgeline characteristics of a kernel / step / program.
+
+    Quantities are totals over one execution of the unit *per compute entity*
+    (per chip), matching the per-chip bandwidths in ``HardwareSpec``.  Using
+    aggregate cluster totals with aggregate bandwidths gives identical
+    intensities (the model is scale-free) — we standardize on per-chip.
+    """
+
+    name: str
+    flops: float          # F
+    mem_bytes: float      # B_M
+    net_bytes: float      # B_N  (wire bytes per chip; 0 for single-chip work)
+
+    def __post_init__(self):
+        if self.flops < 0 or self.mem_bytes < 0 or self.net_bytes < 0:
+            raise ValueError(f"negative resource count in {self}")
+
+    # ---- intensities (paper Table I) ----------------------------------------
+    @property
+    def arithmetic_intensity(self) -> float:
+        """I_A = F / B_M (FLOP per memory byte) — the y axis."""
+        return _safe_div(self.flops, self.mem_bytes)
+
+    @property
+    def memory_intensity(self) -> float:
+        """I_M = B_M / B_N (memory byte per network byte) — the x axis."""
+        return _safe_div(self.mem_bytes, self.net_bytes)
+
+    @property
+    def network_intensity(self) -> float:
+        """I_N = F / B_N = I_A · I_M (FLOP per network byte)."""
+        return _safe_div(self.flops, self.net_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgelineAnalysis:
+    """Full placement of one WorkUnit on one machine."""
+
+    work: WorkUnit
+    hw: HardwareSpec
+    # resource times, seconds
+    t_compute: float
+    t_memory: float
+    t_network: float
+    bottleneck: Resource
+    # roofline-style attainable performance
+    runtime: float                   # max of the three times (projected bound)
+    attained_flops: float            # F / runtime
+    peak_fraction: float             # attained / peak == t_compute / runtime
+    # plane coordinates
+    x: float                         # I_M
+    y: float                         # I_A
+
+    def resource_times(self) -> Dict[Resource, float]:
+        return {
+            Resource.COMPUTE: self.t_compute,
+            Resource.MEMORY: self.t_memory,
+            Resource.NETWORK: self.t_network,
+        }
+
+    def summary(self) -> str:
+        return (
+            f"{self.work.name}: I_A={self.y:.3g} I_M={self.x:.3g} "
+            f"I_N={self.work.network_intensity:.3g} | "
+            f"t_C={self.t_compute:.3e}s t_M={self.t_memory:.3e}s "
+            f"t_N={self.t_network:.3e}s -> {self.bottleneck.value.upper()} "
+            f"bound, {100 * self.peak_fraction:.1f}% of peak"
+        )
+
+
+def _safe_div(a: float, b: float) -> float:
+    if b == 0:
+        return math.inf if a > 0 else 0.0
+    return a / b
+
+
+def classify_by_quadrant(work: WorkUnit, hw: HardwareSpec) -> Resource:
+    """Bottleneck via the paper's 2D plane construction (Fig. 2c/2e).
+
+    Kept literally quadrant-based (not argmax-based) so that the equivalence
+    with :func:`classify_by_times` is a *checked theorem*, not a tautology.
+    Boundary convention: ties go COMPUTE > MEMORY > NETWORK (a point exactly
+    on a ridge attains peak for both resources; we report the "better" one).
+    """
+    if work.flops == work.mem_bytes == work.net_bytes == 0:
+        return Resource.COMPUTE  # degenerate empty unit; matches argmax tie-break
+    x, y = work.memory_intensity, work.arithmetic_intensity
+    x_star, y_star = hw.ridge_memory, hw.ridge_arithmetic
+    if x >= x_star and y >= y_star:
+        return Resource.COMPUTE
+    if x >= x_star and y < y_star:
+        return Resource.MEMORY
+    if x < x_star and y < y_star:
+        return Resource.NETWORK
+    # upper-left: compare the hyperbola x*y against k* (paper Fig. 2d)
+    xy = work.network_intensity  # == x * y, but exact when B_M cancels
+    return Resource.COMPUTE if xy >= hw.ridge_network else Resource.NETWORK
+
+
+def classify_by_times(work: WorkUnit, hw: HardwareSpec) -> Resource:
+    """Bottleneck as argmax of resource times (the physical definition)."""
+    times = {
+        Resource.COMPUTE: _safe_div(work.flops, hw.peak_flops),
+        Resource.MEMORY: _safe_div(work.mem_bytes, hw.hbm_bw),
+        Resource.NETWORK: _safe_div(work.net_bytes, hw.net_bw),
+    }
+    # tie-break in the same COMPUTE > MEMORY > NETWORK priority order
+    order = [Resource.COMPUTE, Resource.MEMORY, Resource.NETWORK]
+    best = max(order, key=lambda r: (times[r], -order.index(r)))
+    return best
+
+
+def analyze(work: WorkUnit, hw: HardwareSpec) -> RidgelineAnalysis:
+    t_c = _safe_div(work.flops, hw.peak_flops)
+    t_m = _safe_div(work.mem_bytes, hw.hbm_bw)
+    t_n = _safe_div(work.net_bytes, hw.net_bw)
+    runtime = max(t_c, t_m, t_n)
+    attained = _safe_div(work.flops, runtime) if runtime > 0 else 0.0
+    return RidgelineAnalysis(
+        work=work,
+        hw=hw,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_network=t_n,
+        bottleneck=classify_by_quadrant(work, hw),
+        runtime=runtime,
+        attained_flops=attained,
+        peak_fraction=_safe_div(attained, hw.peak_flops),
+        x=work.memory_intensity,
+        y=work.arithmetic_intensity,
+    )
+
+
+def analyze_multilink(
+    work_per_link: Mapping[str, WorkUnit], hw: HardwareSpec
+) -> RidgelineAnalysis:
+    """Beyond-paper: Ridgeline with a multi-level network.
+
+    ``work_per_link`` maps link tag -> WorkUnit whose ``net_bytes`` are the
+    wire bytes on that link (flops/mem_bytes identical across entries).  The
+    effective network time is the max over links; we fold it back into a
+    single equivalent WorkUnit by scaling B_N to primary-link units so the 2D
+    plane still applies (the plane is defined up to the choice of network).
+    """
+    if not work_per_link:
+        raise ValueError("need at least one link")
+    items = list(work_per_link.items())
+    base = items[0][1]
+    t_net = 0.0
+    for tag, w in items:
+        bw = hw.bandwidth_for(tag)
+        t_net = max(t_net, _safe_div(w.net_bytes, bw))
+    eff_net_bytes = t_net * hw.net_bw  # primary-link-equivalent bytes
+    eff = WorkUnit(base.name, base.flops, base.mem_bytes, eff_net_bytes)
+    return analyze(eff, hw)
+
+
+# --- Region geometry for plotting -------------------------------------------
+
+def region_at(x: float, y: float, hw: HardwareSpec) -> Resource:
+    """Region of an arbitrary plane point (used by plotting/tests)."""
+    return classify_by_quadrant(WorkUnit("pt", x * y, x, 1.0), hw)
+    # note: B_N=1, B_M=x, F=x*y reproduces coordinates (x, y) exactly.
+
+
+def ascii_plot(
+    analyses: Sequence[RidgelineAnalysis],
+    hw: HardwareSpec,
+    width: int = 72,
+    height: int = 24,
+    x_range: Optional[Tuple[float, float]] = None,
+    y_range: Optional[Tuple[float, float]] = None,
+) -> str:
+    """Log-log ASCII Ridgeline plot: region letters + labelled points.
+
+    Regions: ``.`` network, ``-`` memory, ``+`` compute. Points: digits
+    indexing into ``analyses`` (shown in the legend).
+    """
+    finite = [a for a in analyses if math.isfinite(a.x) and math.isfinite(a.y)
+              and a.x > 0 and a.y > 0]
+    xs = [a.x for a in finite] + [hw.ridge_memory]
+    ys = [a.y for a in finite] + [hw.ridge_arithmetic]
+    if x_range is None:
+        x_range = (min(xs) / 8, max(xs) * 8)
+    if y_range is None:
+        y_range = (min(ys) / 8, max(ys) * 8)
+    lx0, lx1 = math.log10(x_range[0]), math.log10(x_range[1])
+    ly0, ly1 = math.log10(y_range[0]), math.log10(y_range[1])
+
+    def to_col(x: float) -> int:
+        return int(round((math.log10(x) - lx0) / (lx1 - lx0) * (width - 1)))
+
+    def to_row(y: float) -> int:
+        return (height - 1) - int(
+            round((math.log10(y) - ly0) / (ly1 - ly0) * (height - 1))
+        )
+
+    glyph = {Resource.NETWORK: ".", Resource.MEMORY: "-", Resource.COMPUTE: "+"}
+    grid = []
+    for r in range(height):
+        ly = ly1 - (ly1 - ly0) * r / (height - 1)
+        row = []
+        for c in range(width):
+            lx = lx0 + (lx1 - lx0) * c / (width - 1)
+            row.append(glyph[region_at(10 ** lx, 10 ** ly, hw)])
+        grid.append(row)
+
+    # ridge crosshair
+    xc, yr = to_col(hw.ridge_memory), to_row(hw.ridge_arithmetic)
+    for r in range(height):
+        if 0 <= xc < width:
+            grid[r][xc] = "|"
+    for c in range(width):
+        if 0 <= yr < height:
+            grid[yr][c] = "="
+    if 0 <= yr < height and 0 <= xc < width:
+        grid[yr][xc] = "*"
+
+    legend = []
+    for i, a in enumerate(finite):
+        ch = str(i % 10) if i < 10 else chr(ord("a") + (i - 10) % 26)
+        r, c = to_row(a.y), to_col(a.x)
+        if 0 <= r < height and 0 <= c < width:
+            grid[r][c] = ch
+        legend.append(
+            f"  [{ch}] {a.work.name}: ({a.x:.3g}, {a.y:.3g}) -> "
+            f"{a.bottleneck.value}"
+        )
+
+    header = (
+        f"Ridgeline plane for {hw.name} "
+        f"(x*={hw.ridge_memory:.3g} mem-B/net-B, "
+        f"y*={hw.ridge_arithmetic:.3g} FLOP/mem-B, "
+        f"k*={hw.ridge_network:.3g} FLOP/net-B)\n"
+        f"regions: '.'=network  '-'=memory  '+'=compute; "
+        f"x: I_M=B_M/B_N (log), y: I_A=F/B_M (log)\n"
+    )
+    body = "\n".join("".join(row) for row in grid)
+    return header + body + "\n" + "\n".join(legend)
+
+
+def svg_plot(
+    analyses: Sequence[RidgelineAnalysis],
+    hw: HardwareSpec,
+    width: int = 640,
+    height: int = 480,
+) -> str:
+    """Self-contained SVG Ridgeline plot (no plotting deps available)."""
+    finite = [a for a in analyses if a.x > 0 and a.y > 0
+              and math.isfinite(a.x) and math.isfinite(a.y)]
+    xs = [a.x for a in finite] + [hw.ridge_memory]
+    ys = [a.y for a in finite] + [hw.ridge_arithmetic]
+    lx0, lx1 = math.log10(min(xs) / 10), math.log10(max(xs) * 10)
+    ly0, ly1 = math.log10(min(ys) / 10), math.log10(max(ys) * 10)
+    m = 50  # margin
+
+    def px(x):
+        return m + (math.log10(x) - lx0) / (lx1 - lx0) * (width - 2 * m)
+
+    def py(y):
+        return height - m - (math.log10(y) - ly0) / (ly1 - ly0) * (height - 2 * m)
+
+    parts = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+        f'height="{height}" viewBox="0 0 {width} {height}">',
+        f'<rect width="{width}" height="{height}" fill="white"/>',
+    ]
+    # region shading via coarse raster
+    cols, rows = 64, 48
+    fill = {Resource.NETWORK: "#fde0dd", Resource.MEMORY: "#e0ecf4",
+            Resource.COMPUTE: "#e5f5e0"}
+    cw, ch = (width - 2 * m) / cols, (height - 2 * m) / rows
+    for i in range(cols):
+        for j in range(rows):
+            lx = lx0 + (lx1 - lx0) * (i + 0.5) / cols
+            ly = ly0 + (ly1 - ly0) * (j + 0.5) / rows
+            reg = region_at(10 ** lx, 10 ** ly, hw)
+            x0 = m + i * cw
+            y0 = height - m - (j + 1) * ch
+            parts.append(
+                f'<rect x="{x0:.1f}" y="{y0:.1f}" width="{cw + 0.5:.1f}" '
+                f'height="{ch + 0.5:.1f}" fill="{fill[reg]}"/>'
+            )
+    # ridges
+    parts.append(
+        f'<line x1="{px(hw.ridge_memory):.1f}" y1="{m}" '
+        f'x2="{px(hw.ridge_memory):.1f}" y2="{height - m}" '
+        'stroke="#d62728" stroke-dasharray="4"/>'
+    )
+    parts.append(
+        f'<line x1="{m}" y1="{py(hw.ridge_arithmetic):.1f}" '
+        f'x2="{width - m}" y2="{py(hw.ridge_arithmetic):.1f}" '
+        'stroke="#1f77b4" stroke-dasharray="4"/>'
+    )
+    # hyperbola x*y = k* (straight in log space)
+    hx0, hx1 = 10 ** lx0, 10 ** lx1
+    pts = []
+    for i in range(65):
+        x = 10 ** (lx0 + (lx1 - lx0) * i / 64)
+        y = hw.ridge_network / x
+        if 10 ** ly0 <= y <= 10 ** ly1:
+            pts.append(f"{px(x):.1f},{py(y):.1f}")
+    if pts:
+        parts.append(
+            f'<polyline points="{" ".join(pts)}" fill="none" '
+            'stroke="#2ca02c" stroke-dasharray="2"/>'
+        )
+    for a in finite:
+        parts.append(
+            f'<circle cx="{px(a.x):.1f}" cy="{py(a.y):.1f}" r="4" '
+            'fill="#333"/>'
+            f'<text x="{px(a.x) + 6:.1f}" y="{py(a.y) - 6:.1f}" '
+            f'font-size="10" font-family="monospace">{a.work.name}</text>'
+        )
+    parts.append(
+        f'<text x="{width / 2:.0f}" y="{height - 12}" font-size="12" '
+        'text-anchor="middle" font-family="monospace">'
+        "I_M = B_M / B_N (log)</text>"
+        f'<text x="14" y="{height / 2:.0f}" font-size="12" '
+        'text-anchor="middle" font-family="monospace" '
+        f'transform="rotate(-90 14 {height / 2:.0f})">I_A = F / B_M (log)</text>'
+    )
+    parts.append("</svg>")
+    return "\n".join(parts)

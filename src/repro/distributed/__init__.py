@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (DEFAULT_RULES, gqa_safe_rules,
+                                        logical_spec, shard_hint,
+                                        specs_to_shardings, use_sharding)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` mirrors the kernel's exact math (including fp32 accumulation
+semantics) so ``tests/test_kernels.py`` can assert_allclose across shape /
+dtype sweeps with interpret-mode kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(a: jnp.ndarray, b: jnp.ndarray,
+               bias: Optional[jnp.ndarray] = None,
+               act: Optional[str] = None) -> jnp.ndarray:
+    """(M, K) @ (K, N) with fp32 accumulation + fused bias/activation."""
+    y = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "relu2":
+        r = jax.nn.relu(y)
+        y = r * r
+    elif act == "silu":
+        y = jax.nn.silu(y)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act is not None:
+        raise ValueError(act)
+    return y.astype(a.dtype)
+
+
+def ref_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (B,S,H,dh), k/v (B,S,K,dh) -> (B,S,H,dh); softmax in fp32.
+
+    GQA via kv-head repetition, same as models/attention._sdpa.
+    """
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window > 0:
+        ok = ok & (kpos > qpos - window)
+    scores = jnp.where(ok[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and only the dry-run) builds the production meshes out of 512
+# placeholder host devices; no tensor is ever materialized (AOT lower+compile
+# over ShapeDtypeStructs only).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we:
+  1. build the production mesh (16×16 single pod / 2×16×16 multi-pod),
+  2. bind GQA-safe logical sharding rules,
+  3. AOT-lower ``train_step`` (train shapes) or ``serve_step``/``prefill``
+     (inference shapes) over ShapeDtypeStruct inputs,
+  4. ``.compile()`` — success proves the distribution config is coherent,
+  5. record memory_analysis / cost_analysis / parsed collective wire bytes,
+  6. run the Ridgeline classification (the paper's model) on the terms,
+  7. persist a CellReport JSON under ``artifacts/dryrun/``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k --mesh 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+Artifacts are cached by cell key; --force recompiles.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, REGISTRY, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.core import TPU_V5E, analyze_compiled, make_cell_report
+from repro.core.report import CellReport
+from repro.distributed.sharding import gqa_safe_rules, use_sharding
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import ModelConfig
+from repro.optim.optimizer import AdamW
+from repro.serve import engine as serve_engine
+from repro.train.loop import TrainStepConfig, build_train_step
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+POD_SIZE = 256
+
+
+def _mesh_from_name(mesh_name: str):
+    """"16x16" / "2x16x16" are the production contract; other "AxB" splits
+    of the same chips are §Perf variants (e.g. "64x4": trade TP degree for
+    DP when head counts don't divide 16)."""
+    if mesh_name == "2x16x16":
+        return make_production_mesh(multi_pod=True)
+    if mesh_name == "16x16":
+        return make_production_mesh()
+    from repro.launch.mesh import make_mesh
+    dims = tuple(int(d) for d in mesh_name.split("x"))
+    assert len(dims) == 2, mesh_name
+    return make_mesh(dims, ("data", "model"))
+
+
+def _prepare_cfg(cfg: ModelConfig, shape: ShapeSpec,
+                 overrides: Optional[Dict[str, Any]] = None) -> ModelConfig:
+    if cfg.pos_emb == "learned" and cfg.max_seq_len < shape.seq_len:
+        cfg = cfg.replace(max_seq_len=shape.seq_len)
+    if shape.kind == "train" and cfg.family not in ("mlp",):
+        # baseline: full remat (16 GiB HBM budget; "dots" residuals measured
+        # +17 GiB/dev on qwen2.5-3b — a §Perf lever where memory allows)
+        cfg = cfg.replace(remat="full")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def _rules_for(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    rules = gqa_safe_rules(cfg.n_kv_heads, mesh)
+    model_size = mesh.shape.get("model", 1)
+    if shape.kind == "train":
+        # Megatron-SP-style hints: residual-stream activations (the tensors
+        # the layer scan saves for backward) shard their seq axis over the
+        # model axis; GSPMD inserts the all-gather at attention entry and
+        # the reduce-scatter at block exit.  Cuts saved-activation memory
+        # by the TP degree.
+        rules["seq"] = "model"
+    if cfg.n_heads and cfg.n_heads % model_size:
+        # heads don't divide the TP axis (smollm 9H, qwen2-7b 28H, hymba
+        # 25H): fall back to sequence-parallel activations so the O(S^2)
+        # score tensor still shards; FFN TP stays (hidden dims divide).
+        rules["heads"] = None
+        rules["q_proj"] = None
+        rules["seq"] = "model"
+        rules["attn_seq"] = "model"
+    if shape.kind == "decode":
+        # decode memory = KV cache: shard its SEQ axis over the model axis
+        # (SP-decode).  The cache write is an elementwise select (see
+        # attention.decode_attention) so it partitions; softmax/output
+        # reductions over the sharded S axis are tiny (B·H·dh) collectives.
+        # All per-token projections are left local: sharding q heads while
+        # the cache shards on seq makes GSPMD bounce tensors between
+        # incompatible layouts (measured "involuntary full remat" warnings).
+        rules["kv_seq"] = "model"
+        rules["head_dim"] = None
+    if shape.kind != "train" and shape.global_batch < 16:
+        # long_500k has global_batch=1: nothing to shard on data
+        rules["batch"] = None
+    # MoE: EP when the (optionally padded) expert count divides the model
+    # axis; otherwise TP the per-expert hidden dim (replicating 60 experts
+    # measured 375 GiB/dev)
+    e_eff = max(cfg.n_experts, cfg.pad_experts_to)
+    if cfg.n_experts and e_eff % model_size:
+        rules["experts"] = None
+        rules["expert_ffn"] = "model"
+    return rules
+
+
+def _lower_one(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    if shape.kind == "train":
+        return _lower_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return _lower_prefill(cfg, shape, mesh)
+    return _lower_decode(cfg, shape, mesh)
+
+
+def _probe_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
+    """k-layer fully-unrolled config for cost probing (layers homogeneous)."""
+    kw: Dict[str, Any] = dict(n_layers=k, scan_layers=False,
+                              slstm_layers=(), global_attn_layers=())
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = k
+    return cfg.replace(**kw)
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeSpec, mesh, mesh_name: str):
+    """XLA cost_analysis counts while-loop bodies ONCE (verified in
+    tests/test_hlo_analysis.py), so the scanned production artifact
+    undercounts F / B_M / wire by ~the layer count.  Probe: compile k=2,4
+    layers UNROLLED, fit cost(L) = a + b*L, extrapolate to the full depth.
+    ``a`` captures the layer-independent part (embedding, logits+loss,
+    optimizer, gradient all-reduce), ``b`` the per-layer part (block
+    compute + TP/SP collectives).
+    """
+    samples = []
+    for k in (2, 4):
+        pcfg = _probe_cfg(cfg, k)
+        compiled, _ = _lower_one(pcfg, shape, mesh)
+        c = analyze_compiled(compiled, mesh.size,
+                             pod_size=POD_SIZE if mesh_name == "2x16x16" else 0)
+        samples.append((c.flops, c.mem_bytes, c.wire_bytes,
+                        {kk: b for kk, (_, b) in
+                         c.collectives.by_kind().items()},
+                        c.collectives.cross_pod_wire_bytes))
+    L = cfg.n_layers
+
+    def fit(c2, c4):
+        b = (c4 - c2) / 2.0
+        return max(c2 - 2.0 * b + b * L, 0.0)
+
+    f, m, w = (fit(samples[0][i], samples[1][i]) for i in range(3))
+    kinds = {kk: fit(samples[0][3].get(kk, 0.0), samples[1][3].get(kk, 0.0))
+             for kk in set(samples[0][3]) | set(samples[1][3])}
+    cross = fit(samples[0][4], samples[1][4])
+    return f, m, w, kinds, cross
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str,
+               variant: str = "baseline",
+               overrides: Optional[Dict[str, Any]] = None,
+               probe: bool = True,
+               rules_overrides: Optional[Dict[str, Any]] = None):
+    """Lower + compile one cell; returns (CellReport, compiled).
+
+    The production artifact (scan-over-layers) provides the compile proof +
+    memory analysis; unrolled k-layer probes provide loop-corrected cost
+    terms when the model scans (see probe_costs).
+    """
+    shape = SHAPES[shape_name]
+    mesh = _mesh_from_name(mesh_name)
+    cfg = _prepare_cfg(get_config(arch), shape, overrides)
+    rules = _rules_for(cfg, mesh, shape)
+    if rules_overrides:
+        rules.update(rules_overrides)
+    t0 = time.time()
+    probe_note = "costs=unrolled-exact"
+    probe_kinds = None
+    cross_pod = None
+    with use_sharding(mesh, rules):
+        compiled, step_kind = _lower_one(cfg, shape, mesh)
+        costs = analyze_compiled(
+            compiled, mesh.size,
+            pod_size=POD_SIZE if mesh_name == "2x16x16" else 0)
+        if probe and cfg.scan_layers:
+            try:
+                f, m, w, probe_kinds, cross_pod = probe_costs(
+                    cfg, shape, mesh, mesh_name)
+                costs = dataclasses.replace(
+                    costs, flops=f, mem_bytes=m, wire_bytes=w)
+                probe_note = "costs=unroll-probe-fit"
+            except Exception as e:  # noqa: BLE001 — probe is best-effort
+                probe_note = f"costs=scan-counted(probe-failed:{type(e).__name__})"
+    wall = time.time() - t0
+    total, active = sp.param_counts(cfg)
+    cross_note = ""
+    if mesh_name == "2x16x16":
+        cp = (cross_pod if cross_pod is not None
+              else costs.collectives.cross_pod_wire_bytes)
+        cross_note = f";cross_pod={cp/1e9:.3f}GB"
+    report = make_cell_report(
+        arch=arch, shape=shape_name, mesh=mesh_name, step_kind=step_kind,
+        costs=costs, hw=TPU_V5E, model_flops=sp.model_flops(cfg, shape),
+        params_total=total, params_active=active,
+        tokens_per_step=(shape.global_batch * shape.seq_len
+                         if shape.kind != "decode" else shape.global_batch),
+        variant=variant, wall_compile_s=wall,
+        notes=probe_note + cross_note)
+    if probe_kinds is not None:
+        report.wire_bytes_by_kind = probe_kinds
+    return report, compiled
+
+
+#: params above this count get FSDP (param DP-sharding) in the baseline —
+#: fp32 master + grads of a >8B model don't fit 16 GiB at TP=16 alone.
+FSDP_THRESHOLD = 8e9
+
+
+def _lower_train(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 zero1: bool = True, fsdp: Optional[bool] = None,
+                 n_micro: int = 1):
+    opt = AdamW(learning_rate=1e-3)
+    train_step = build_train_step(cfg, opt, TrainStepConfig(n_micro=n_micro))
+    if fsdp is None:
+        total, _ = sp.param_counts(cfg)
+        fsdp = total > FSDP_THRESHOLD
+    state_abs = sp.abstract_train_state(cfg, opt)
+    state_sds = sp.attach(
+        state_abs, sp.train_state_specs(cfg, zero1=zero1, fsdp=fsdp), mesh)
+    batch_sds = sp.input_specs(cfg, shape, mesh)
+    lowered = jax.jit(train_step, donate_argnums=(0,)).lower(state_sds, batch_sds)
+    return lowered.compile(), "train_step"
+
+
+def _bf16(tree):
+    """Serving runs from bf16 weights (production standard): halves the
+    per-device parameter footprint of the decode/prefill cells."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16, sharding=l.sharding)
+        if l.dtype == jnp.float32 else l, tree)
+
+
+def _lower_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    from repro.train.loop import make_loss_fn
+    from repro.models import transformer as lm_mod
+    from repro.models import encdec as encdec_mod
+    from repro.models import vlm as vlm_mod
+
+    params_abs = sp.abstract_params(cfg)
+    from repro.train.loop import model_param_specs
+    params_sds = _bf16(sp.attach(params_abs, model_param_specs(cfg), mesh))
+    batch = sp.input_specs(cfg, shape, mesh)
+
+    if cfg.family == "encdec":
+        fn = lambda p, b: encdec_mod.forward(p, b["tokens"], b["frames"], cfg)[0]
+    elif cfg.family == "vlm":
+        fn = lambda p, b: vlm_mod.forward(p, b["tokens"], b["patches"], cfg)[0]
+    else:
+        fn = lambda p, b: lm_mod.forward(p, b["tokens"], cfg)[0]
+    lowered = jax.jit(fn).lower(params_sds, batch)
+    return lowered.compile(), "prefill_step"
+
+
+def _lower_decode(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    from repro.train.loop import model_param_specs
+
+    params_abs = sp.abstract_params(cfg)
+    params_sds = _bf16(sp.attach(params_abs, model_param_specs(cfg), mesh))
+    cache_abs = sp.abstract_cache(cfg, params_abs, shape)
+    cache_sds = sp.attach(cache_abs, sp.cache_logical_specs(cfg, cache_abs),
+                          mesh)
+    dec = sp.decode_input_specs(cfg, shape, mesh)
+    serve_step = serve_engine.build_serve_step(cfg)
+    lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+        params_sds, dec["tokens"], cache_sds, dec["pos"])
+    return lowered.compile(), "serve_step"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, force: bool = False,
+             variant: str = "baseline",
+             overrides: Optional[Dict[str, Any]] = None,
+             rules_overrides: Optional[Dict[str, Any]] = None) -> CellReport:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(
+        ARTIFACTS, f"{arch}__{shape_name}__{mesh_name}__{variant}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return CellReport.from_json(f.read())
+    report, compiled = lower_cell(arch, shape_name, mesh_name,
+                                  variant=variant, overrides=overrides,
+                                  rules_overrides=rules_overrides)
+    print(compiled.memory_analysis())
+    report.save(ARTIFACTS)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="16x16",
+                    help="16x16 | 2x16x16 | both | any AxB split (variants)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="ModelConfig override, e.g. --set attn_impl=chunked")
+    ap.add_argument("--rule", action="append", default=[], metavar="K=V",
+                    help="sharding-rule override, e.g. --rule seq=none")
+    args = ap.parse_args(argv)
+
+    def _coerce(v: str):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        return {"true": True, "false": False}.get(v.lower(), v)
+
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    overrides = {k: _coerce(v) for k, v in overrides.items()} or None
+    rules_ov = {k: (None if v.lower() == "none" else v)
+                for k, v in (kv.split("=", 1) for kv in args.rule)} or None
+
+    meshes = ["16x16", "2x16x16"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED
+                 for s in SHAPES
+                 if applicable(get_config(a).family, s)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_name in meshes:
+        for arch, shape_name in cells:
+            key = f"{arch} × {shape_name} × {mesh_name}"
+            try:
+                t0 = time.time()
+                rep = run_cell(arch, shape_name, mesh_name, force=args.force,
+                               variant=args.variant, overrides=overrides,
+                               rules_overrides=rules_ov)
+                print(f"[OK {time.time()-t0:7.1f}s] {key}: "
+                      f"{rep.bottleneck}-bound, runtime {rep.runtime:.3e}s, "
+                      f"{100*rep.peak_fraction:.1f}% peak, "
+                      f"mem/dev {rep.peak_memory_per_device/2**30:.2f} GiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report all cell failures
+                failures.append((key, repr(e)))
+                traceback.print_exc()
+                print(f"[FAIL] {key}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for k, e in failures:
+            print(f"  {k}: {e}")
+        return 1
+    print(f"\nall {len(cells) * len(meshes)} cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 64 --reduced --ckpt-dir /tmp/run1
+
+On the CPU container, use ``--reduced`` (CPU-sized config of the same
+family); on a real pod, omit it and pass ``--mesh data,model`` sizes.  The
+launcher wires together the full substrate: mesh + logical sharding rules,
+deterministic per-host data pipeline, AdamW with warmup-cosine, the
+fault-tolerant runner (auto-resume from the latest committed checkpoint,
+periodic async saves, straggler flags), and a closing Ridgeline report of
+the compiled step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config, get_reduced
+from repro.core import TPU_V5E, WorkUnit, analyze
+from repro.core.hlo_analysis import analyze_compiled
+from repro.data.pipeline import DataConfig, make_stream
+from repro.distributed.sharding import gqa_safe_rules, use_sharding
+from repro.launch.mesh import make_mesh
+from repro.optim.optimizer import AdamW, warmup_cosine
+from repro.train.fault_tolerance import ResilientRunner, RunnerConfig
+from repro.train.loop import TrainStepConfig, build_train_step, init_train_state
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--mesh", default="1x1",
+                    help="data x model split, e.g. 16x16 on a pod")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.replace(compute_dtype=jnp.float32)
+    dims = tuple(int(d) for d in args.mesh.split("x"))
+    mesh = make_mesh(dims, ("data", "model"))
+
+    opt = AdamW(learning_rate=warmup_cosine(args.lr, 20, args.steps))
+    step_cfg = TrainStepConfig(n_micro=args.n_micro)
+
+    with use_sharding(mesh, gqa_safe_rules(cfg.n_kv_heads, mesh)):
+        train_step = jax.jit(build_train_step(cfg, opt, step_cfg),
+                             donate_argnums=(0,))
+        state = init_train_state(jax.random.PRNGKey(args.seed), cfg, opt)
+        stream = make_stream(cfg, DataConfig(
+            seed=args.seed, global_batch=args.batch, seq_len=args.seq))
+        runner = ResilientRunner(
+            train_step, Checkpointer(args.ckpt_dir, keep=3),
+            RunnerConfig(ckpt_every=args.ckpt_every),
+            on_straggler=lambda ev: print(
+                f"[straggler] step {ev.step}: {ev.step_time:.2f}s "
+                f"vs EWMA {ev.ewma:.2f}s", file=sys.stderr))
+        state, history = runner.run(state, stream, n_steps=args.steps)
+
+        if history:
+            first = np.mean([h["ce"] for h in history[:10]])
+            last = np.mean([h["ce"] for h in history[-10:]])
+            print(f"steps {history[0]['step']}..{history[-1]['step']}  "
+                  f"CE {first:.4f} -> {last:.4f}")
+
+        # closing Ridgeline report of the compiled step
+        batch_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.asarray(x).dtype),
+            stream.batch(0))
+        state_abs = jax.eval_shape(lambda s: s, state)
+        compiled = jax.jit(build_train_step(cfg, opt, step_cfg)).lower(
+            state_abs, batch_abs).compile()
+        costs = analyze_compiled(compiled, mesh.size)
+        print(analyze(WorkUnit(f"{args.arch}/train", costs.flops,
+                               costs.mem_bytes, costs.wire_bytes),
+                      TPU_V5E).summary())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""Model zoo: 10 assigned architectures + the paper's DLRM MLP case study."""
+from repro.models.common import ModelConfig, count_params, softmax_cross_entropy

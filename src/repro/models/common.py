@@ -1,0 +1,218 @@
+"""Shared model substrate: config, initializers, norms, rope, embeddings.
+
+Pure-JAX functional modules: ``init_*(key, cfg) -> params`` (nested dict
+pytrees, fp32 master weights) and ``apply``-style functions taking params.
+Compute runs in ``cfg.compute_dtype`` (bf16 by default — matches the TPU v5e
+MXU the dry-run models); parameters stay fp32 and are cast at use.
+
+Every ``init_*`` has a ``*_specs`` twin returning the same pytree structure
+with *logical axis names* per dimension; ``repro.distributed.sharding`` maps
+logical axes -> mesh axes to build NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+Specs = Any   # matching pytree of tuples of logical axis names (or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers the whole LM family (dense/MoE/SSM/hybrid/enc-dec)."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | mlp
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # attention
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    pos_emb: str = "rope"            # rope | learned | none
+    rope_theta: float = 10000.0
+    sliding_window: int = 0          # 0 = full attention
+    global_attn_layers: Tuple[int, ...] = ()   # full-attn layers when windowed
+    causal: bool = True
+    # ffn
+    ffn_activation: str = "swiglu"   # swiglu | gelu
+    ffn_bias: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # moe
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    pad_experts_to: int = 0          # pad expert count for EP divisibility
+                                     # (dead experts are never routed to)
+    moe_group_tokens: int = 2048     # GShard dispatch-group size: dispatch
+                                     # HBM traffic scales ~T·Tg·k·cf
+    # ssm / hybrid
+    ssm_state: int = 0               # per-head SSM state size
+    ssm_conv: int = 4                # short conv width
+    slstm_layers: Tuple[int, ...] = ()   # xLSTM: which blocks are sLSTM
+    ssm_chunk: int = 256             # chunked-scan block length
+    # enc-dec
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # fixed encoder context (audio frames)
+    # vlm
+    visual_tokens: int = 0
+    visual_width: int = 0            # ViT stub embedding width
+    # mlp (DLRM case study)
+    mlp_widths: Tuple[int, ...] = ()
+    # numerics / lowering
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    scan_layers: bool = True
+    remat: str = "none"              # none | dots | full
+    use_flash: bool = False          # Pallas flash-attention path
+    use_pallas_matmul: bool = False  # Pallas blocked-matmul path (MLP)
+    attn_impl: str = "dense"         # dense | chunked (O(S·bq) XLA blockwise)
+    attn_block_q: int = 1024         # q-block for chunked attention
+    sp_outputs: bool = False         # Megatron-SP: constrain row-parallel
+                                     # block outputs to seq-sharded, turning
+                                     # their all-reduce into reduce-scatter
+    max_seq_len: int = 8192          # learned-pos table size; rope is unbounded
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.dh
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.dh
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --- initializers -------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def zeros(shape, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.ones(shape, dtype)
+
+
+# --- norms --------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": ones((d,))}
+    if cfg.norm == "layernorm":
+        p["bias"] = zeros((d,))
+    return p
+
+
+def norm_specs(cfg: ModelConfig) -> Specs:
+    p = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        p["bias"] = ("embed",)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(cfg.compute_dtype)
+
+
+def rms_norm_head(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head QK-norm (Qwen3): normalize over the last (head) dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# --- rotary position embeddings -----------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, n_heads, dh); positions: broadcastable to (..., seq)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]                 # (..., seq, 1, dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal table (seq, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / (d // 2 - 1 if d > 2 else 1)))
+    tab = jnp.zeros((seq, d), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab
+
+
+# --- activations ----------------------------------------------------------------
+
+def activation(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "relu2":  # squared ReLU (Primer / Nemotron family)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# --- losses ---------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE; logits (..., V) any dtype -> fp32 loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# --- param counting ---------------------------------------------------------------
+
+def count_params(params: Params) -> int:
+    return int(sum(p.size for p in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356].
+
+Encoder: conv frontend is a STUB per the brief — ``input_specs`` feeds
+precomputed frame embeddings (B, T_enc, D) directly (the two stride-2 convs
+that produce them are not part of the assigned backbone).  Encoder blocks are
+bidirectional MHA + GELU MLP with pre-LayerNorm; sinusoidal positions.
+
+Decoder: causal self-attention + cross-attention over encoder output +
+GELU MLP; learned positions; embedding tied with the LM head (as Whisper).
+
+Whisper-tiny is MHA (6 heads == 6 kv heads), biases on (Whisper uses biased
+projections), LayerNorm not RMSNorm — all driven by the config.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models.common import (ModelConfig, Params, Specs, apply_norm,
+                                 embed_init, init_norm, norm_specs,
+                                 sinusoidal_positions)
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn_norm": init_norm(cfg),
+                "attn": attn_mod.init_attention(k1, cfg),
+                "ffn_norm": init_norm(cfg),
+                "ffn": ffn_mod.init_ffn(k2, cfg)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"self_norm": init_norm(cfg),
+                "self_attn": attn_mod.init_attention(k1, cfg),
+                "cross_norm": init_norm(cfg),
+                "cross_attn": attn_mod.init_attention(k2, cfg),
+                "ffn_norm": init_norm(cfg),
+                "ffn": ffn_mod.init_ffn(k3, cfg)}
+
+    enc_keys = jnp.stack(jax.random.split(ks[0], cfg.encoder_layers))
+    dec_keys = jnp.stack(jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "enc_blocks": jax.vmap(enc_block)(enc_keys),
+        "enc_norm": init_norm(cfg),
+        "dec_embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model),
+        "dec_pos": embed_init(ks[3], cfg.max_seq_len, cfg.d_model),
+        "dec_blocks": jax.vmap(dec_block)(dec_keys),
+        "dec_norm": init_norm(cfg),
+    }
+
+
+def encdec_specs(cfg: ModelConfig) -> Specs:
+    stack = lambda specs: jax.tree.map(
+        lambda axes: ("layers",) + tuple(axes), specs,
+        is_leaf=lambda x: isinstance(x, tuple))
+    enc_blk = {"attn_norm": norm_specs(cfg),
+               "attn": attn_mod.attention_specs(cfg),
+               "ffn_norm": norm_specs(cfg), "ffn": ffn_mod.ffn_specs(cfg)}
+    dec_blk = {"self_norm": norm_specs(cfg),
+               "self_attn": attn_mod.attention_specs(cfg),
+               "cross_norm": norm_specs(cfg),
+               "cross_attn": attn_mod.attention_specs(cfg),
+               "ffn_norm": norm_specs(cfg), "ffn": ffn_mod.ffn_specs(cfg)}
+    return {
+        "enc_blocks": stack(enc_blk), "enc_norm": norm_specs(cfg),
+        "dec_embed": ("vocab", "embed"), "dec_pos": (None, "embed"),
+        "dec_blocks": stack(dec_blk), "dec_norm": norm_specs(cfg),
+    }
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames (B, T_enc, D) stub embeddings -> encoder states (B, T_enc, D)."""
+    dt = cfg.compute_dtype
+    T = frames.shape[1]
+    x = frames.astype(dt) + sinusoidal_positions(T, cfg.d_model).astype(dt)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+
+    def body(x, blk):
+        h = apply_norm(blk["attn_norm"], x, cfg)
+        x = x + attn_mod.apply_attention(blk["attn"], h, cfg, causal=False)
+        h = apply_norm(blk["ffn_norm"], x, cfg)
+        x = x + ffn_mod.apply_ffn(blk["ffn"], h, cfg)
+        return shard_hint(x, ("batch", "seq", "embed")), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def forward(params: Params, tokens: jnp.ndarray, frames: jnp.ndarray,
+            cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(tokens (B,S), frames (B,T_enc,D)) -> (logits (B,S,V), aux=0)."""
+    dt = cfg.compute_dtype
+    enc = encode(params, frames, cfg)
+    S = tokens.shape[1]
+    x = jnp.take(params["dec_embed"].astype(dt), tokens, axis=0)
+    x = x + params["dec_pos"][:S].astype(dt)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+
+    def body(x, blk):
+        h = apply_norm(blk["self_norm"], x, cfg)
+        x = x + attn_mod.apply_attention(blk["self_attn"], h, cfg, causal=True)
+        h = apply_norm(blk["cross_norm"], x, cfg)
+        x = x + attn_mod.apply_attention(blk["cross_attn"], h, cfg,
+                                         kv_src=enc, causal=False)
+        h = apply_norm(blk["ffn_norm"], x, cfg)
+        x = x + ffn_mod.apply_ffn(blk["ffn"], h, cfg)
+        return shard_hint(x, ("batch", "seq", "embed")), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(params["dec_norm"], x, cfg)
+    logits = x @ params["dec_embed"].T.astype(dt)
+    return shard_hint(logits, ("batch", "seq", "vocab")), jnp.float32(0.0)
+
+
+# --- decode -------------------------------------------------------------------------
+
+def init_encdec_cache(params: Params, frames: jnp.ndarray, batch: int,
+                      max_len: int, cfg: ModelConfig) -> Dict[str, Any]:
+    """Prefill: run the encoder once, precompute per-layer cross K/V."""
+    dt = cfg.compute_dtype
+    enc = encode(params, frames, cfg)
+
+    def cross_kv(blk):
+        p = blk["cross_attn"]
+        Tk = enc.shape[1]
+        k = (enc @ p["wk"].astype(dt))
+        v = (enc @ p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        k = k.reshape(batch, Tk, cfg.n_kv_heads, cfg.dh)
+        v = v.reshape(batch, Tk, cfg.n_kv_heads, cfg.dh)
+        return k, v
+
+    # vmap over the stacked layer axis of dec_blocks -> (L, B, Tk, K, dh)
+    ck, cv = jax.vmap(cross_kv)(params["dec_blocks"])
+    return {"self": attn_mod.init_kv_cache(cfg, batch, max_len),
+            "cross_k": ck, "cross_v": cv}
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, cache: Dict[str, Any],
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    dt = cfg.compute_dtype
+    B = tokens.shape[0]
+    x = jnp.take(params["dec_embed"].astype(dt), tokens, axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0).astype(dt)
+
+    def body(x, inp):
+        blk, krow, vrow, ck, cv = inp
+        h = apply_norm(blk["self_norm"], x, cfg)
+        a, kv = attn_mod.decode_attention(blk["self_attn"], h,
+                                          {"k": krow, "v": vrow}, pos, cfg)
+        x = x + a
+        h = apply_norm(blk["cross_norm"], x, cfg)
+        q, _, _ = attn_mod._project_qkv(blk["cross_attn"], h, h, cfg)
+        out = attn_mod._sdpa_grouped(q, ck, cv, None, cfg)
+        x = x + out.reshape(B, 1, cfg.q_dim) @ blk["cross_attn"]["wo"].astype(dt)
+        h = apply_norm(blk["ffn_norm"], x, cfg)
+        x = x + ffn_mod.apply_ffn(blk["ffn"], h, cfg)
+        return x, (kv["k"], kv["v"])
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"]["k"],
+                  cache["self"]["v"], cache["cross_k"], cache["cross_v"]))
+    new_cache = {"self": {"k": k, "v": v},
+                 "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    x = apply_norm(params["dec_norm"], x, cfg)
+    logits = x @ params["dec_embed"].T.astype(dt)
+    return logits, new_cache

@@ -1,0 +1,68 @@
+"""Dense feed-forward blocks: SwiGLU (llama/qwen) and GELU MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, Params, Specs, activation,
+                                 dense_init, zeros)
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_activation == "swiglu":
+        p = {
+            "w_gate": dense_init(ks[0], cfg.d_model, d_ff),
+            "w_up": dense_init(ks[1], cfg.d_model, d_ff),
+            "w_down": dense_init(ks[2], d_ff, cfg.d_model),
+        }
+    else:
+        p = {
+            "w_up": dense_init(ks[0], cfg.d_model, d_ff),
+            "w_down": dense_init(ks[1], d_ff, cfg.d_model),
+        }
+    if cfg.ffn_bias:
+        p["b_up"] = zeros((d_ff,))
+        p["b_down"] = zeros((cfg.d_model,))
+    return p
+
+
+def ffn_specs(cfg: ModelConfig) -> Specs:
+    if cfg.ffn_activation == "swiglu":
+        p = {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+             "w_down": ("ffn", "embed")}
+    else:
+        p = {"w_up": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+    if cfg.ffn_bias:
+        p["b_up"] = ("ffn",)
+        p["b_down"] = ("embed",)
+    return p
+
+
+def apply_ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    if cfg.use_pallas_matmul:
+        from repro.kernels import ops as kops
+        matmul = kops.matmul
+    else:
+        matmul = lambda a, b, bias=None, act=None: _mm(a, b, bias, act)
+    if cfg.ffn_activation == "swiglu":
+        g = matmul(x, p["w_gate"].astype(dt), act="silu")
+        u = matmul(x, p["w_up"].astype(dt),
+                   bias=p.get("b_up", None))
+        h = g * u
+    else:
+        h = matmul(x, p["w_up"].astype(dt), bias=p.get("b_up"),
+                   act=cfg.ffn_activation)
+    return matmul(h, p["w_down"].astype(dt), bias=p.get("b_down"))
+
+
+def _mm(a, b, bias=None, act=None):
+    y = a @ b
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if act is not None:
+        y = activation(act, y)
+    return y

@@ -1,0 +1,170 @@
+"""Hymba hybrid blocks [arXiv:2411.13676]: parallel attention ∥ Mamba heads.
+
+Each block: x -> pre-norm -> {GQA attention, Mamba heads} on the same input,
+outputs per-branch RMS-normalized, combined with learnable per-channel scales
+β (the paper's fusion), then the usual SwiGLU FFN sub-block.
+
+Attention is sliding-window (``cfg.sliding_window``) in every layer except
+``cfg.global_attn_layers`` (paper: first/middle/last stay global) — this plus
+the constant-size SSM state is what makes ``long_500k`` decode feasible.
+The per-layer window is carried through the layer scan as data (a traced
+scalar: S+1 ⇒ effectively global), so the stacked-params scan stays
+homogeneous.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models.attention import (NEG_INF, _project_qkv, _sdpa,
+                                    _sdpa_grouped)
+from repro.models.common import (ModelConfig, Params, Specs, apply_norm,
+                                 apply_rope, init_norm, norm_specs, ones)
+
+
+def init_hymba_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "pre_norm": init_norm(cfg),
+        "attn": attn_mod.init_attention(ks[0], cfg),
+        "mamba": mamba_mod.init_mamba(ks[1], cfg),
+        "attn_out_norm": init_norm(cfg),
+        "mamba_out_norm": init_norm(cfg),
+        "beta_attn": ones((cfg.d_model,)),
+        "beta_mamba": ones((cfg.d_model,)),
+        "ffn_norm": init_norm(cfg),
+        "ffn": ffn_mod.init_ffn(ks[2], cfg),
+    }
+
+
+def hymba_block_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "pre_norm": norm_specs(cfg),
+        "attn": attn_mod.attention_specs(cfg),
+        "mamba": mamba_mod.mamba_specs(cfg),
+        "attn_out_norm": norm_specs(cfg),
+        "mamba_out_norm": norm_specs(cfg),
+        "beta_attn": ("embed",),
+        "beta_mamba": ("embed",),
+        "ffn_norm": norm_specs(cfg),
+        "ffn": ffn_mod.ffn_specs(cfg),
+    }
+
+
+def _windowed_attention(p, h, cfg: ModelConfig, window) -> jnp.ndarray:
+    """Full-seq attention with a *traced* window size (for the layer scan)."""
+    dt = cfg.compute_dtype
+    B, S, _ = h.shape
+    q, k, v = _project_qkv(p, h, h, cfg)
+    if cfg.pos_emb == "rope":
+        pos = jnp.arange(S)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    from repro.distributed.sharding import shard_hint
+    q = shard_hint(q, ("batch", "attn_seq", "heads", None))
+    k = shard_hint(k, ("batch", "attn_seq", "kv_heads", None))
+    v = shard_hint(v, ("batch", "attn_seq", "kv_heads", None))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = (kpos <= qpos) & (kpos > qpos - window)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    out = _sdpa(q, k, v, bias, cfg)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(dt)
+
+
+def apply_hymba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      window) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    h = apply_norm(p["pre_norm"], x, cfg)
+    a = _windowed_attention(p["attn"], h, cfg, window)
+    m = mamba_mod.apply_mamba(p["mamba"], h, cfg)
+    fused = 0.5 * (apply_norm(p["attn_out_norm"], a, cfg) * p["beta_attn"].astype(dt)
+                   + apply_norm(p["mamba_out_norm"], m, cfg) * p["beta_mamba"].astype(dt))
+    x = x + fused
+    x = x + ffn_mod.apply_ffn(p["ffn"], apply_norm(p["ffn_norm"], x, cfg), cfg)
+    return x
+
+
+def layer_windows(cfg: ModelConfig, seq_len: int) -> jnp.ndarray:
+    """Per-layer attention window array (traced through the scan).
+
+    Global layers get window = seq_len (sees everything); local layers get
+    ``cfg.sliding_window``.
+    """
+    w = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    for i in cfg.global_attn_layers:
+        w = w.at[i].set(seq_len)
+    return w
+
+
+# --- decode ----------------------------------------------------------------------
+#
+# Decode is *unrolled* over layers (training scans): the KV memory bound of
+# Hymba comes from local layers holding only an O(window) ring buffer while
+# just len(global_attn_layers) layers keep full-length KV.  A homogeneous
+# layer scan would force the full buffer on every layer (O(L·S) — 21 GiB at
+# 500k for hymba-1.5b); unrolling keeps it at O(n_global·S + L·W).
+
+def init_hymba_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    W = min(cfg.sliding_window, max_len)
+    dt = cfg.compute_dtype
+    cache: Dict = {}
+    M, n = mamba_mod.init_mamba_state(cfg, batch)
+    for i in range(cfg.n_layers):
+        S = max_len if i in cfg.global_attn_layers else W
+        cache[f"layer{i}"] = {
+            "k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.dh), dt),
+            "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.dh), dt),
+            "mM": M, "mn": n,
+        }
+    return cache
+
+
+def decode_hymba_block(p: Params, x: jnp.ndarray, cache_row: Dict,
+                       pos: jnp.ndarray, cfg: ModelConfig,
+                       is_global: bool) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode for one layer (static local/global branch).
+
+    Local layers write a ring buffer slot ``pos % W`` and mask by slot age;
+    global layers write at ``pos`` into their full-length buffer.
+    """
+    dt = cfg.compute_dtype
+    B = x.shape[0]
+    h = apply_norm(p["pre_norm"], x, cfg)
+
+    q, k_new, v_new = _project_qkv(p["attn"], h, h, cfg)
+    if cfg.pos_emb == "rope":
+        pos_arr = jnp.full((B, 1), pos, jnp.int32)
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
+
+    # elementwise cache write (partitions under kv_seq sharding; see
+    # attention.decode_attention)
+    S = cache_row["k"].shape[1]
+    if is_global:
+        slot = pos
+        ok = jnp.arange(S) <= pos
+    else:
+        slot = jnp.mod(pos, S)
+        ages = jnp.mod(slot - jnp.arange(S), S)      # age of each ring slot
+        ok = ages <= jnp.minimum(pos, S - 1)
+    at_slot = (jnp.arange(S) == slot)[None, :, None, None]
+    k = jnp.where(at_slot, k_new, cache_row["k"])
+    v = jnp.where(at_slot, v_new, cache_row["v"])
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    a = _sdpa_grouped(q, k, v, bias, cfg)
+    a = a.reshape(B, 1, cfg.q_dim) @ p["attn"]["wo"].astype(dt)
+
+    m, mstate = mamba_mod.decode_mamba(
+        p["mamba"], h, (cache_row["mM"], cache_row["mn"]), cfg)
+    fused = 0.5 * (apply_norm(p["attn_out_norm"], a, cfg) * p["beta_attn"].astype(dt)
+                   + apply_norm(p["mamba_out_norm"], m, cfg) * p["beta_mamba"].astype(dt))
+    x = x + fused
+    x = x + ffn_mod.apply_ffn(p["ffn"], apply_norm(p["ffn_norm"], x, cfg), cfg)
+    new_row = {"k": k, "v": v, "mM": mstate[0], "mn": mstate[1]}
+    return x, new_row

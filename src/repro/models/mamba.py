@@ -1,0 +1,93 @@
+"""Mamba-style selective-SSM heads (SSD form) for the Hymba hybrid blocks.
+
+Hymba [arXiv:2411.13676] pairs attention heads with Mamba heads in parallel
+inside each block.  We realize the Mamba heads in the Mamba-2/SSD per-head
+scalar-decay form (see DESIGN.md: MXU-friendly chunked GEMMs instead of the
+per-channel selective scan, which is a serial VPU pattern on TPU):
+
+    h_t = a_t h_{t-1} + Δ_t B_t x_t,   y_t = C_t h_t + D ⊙ x_t
+    a_t = exp(-Δ_t · exp(A_log)),      Δ_t = softplus(w_dt · u_t + b_dt)
+
+Head layout mirrors the attention side: ``n_heads`` heads of ``dh`` channels,
+state size ``cfg.ssm_state`` per head.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params, Specs, dense_init, zeros
+from repro.models.ssd import (chunked_linear_recurrence, decode_linear_step,
+                              init_linear_state)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    D, H, dh, N = cfg.d_model, cfg.n_heads, cfg.dh, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_v": dense_init(ks[0], D, H * dh),
+        "w_B": dense_init(ks[1], D, H * N),
+        "w_C": dense_init(ks[2], D, H * N),
+        "w_dt": dense_init(ks[3], D, H),
+        "b_dt": zeros((H,)),
+        "A_log": jnp.zeros((H,), jnp.float32),     # a = exp(-dt * exp(A_log))
+        "D_skip": jnp.ones((H, dh), jnp.float32),
+        "w_out": dense_init(ks[4], H * dh, D),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "w_v": ("embed", "q_proj"), "w_B": ("embed", "kv_proj"),
+        "w_C": ("embed", "kv_proj"), "w_dt": ("embed", None),
+        "b_dt": (None,), "A_log": (None,), "D_skip": ("heads", None),
+        "w_out": ("q_proj", "embed"),
+    }
+
+
+def _mamba_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    dt_ = cfg.compute_dtype
+    B, S, D = x.shape
+    H, dh, N = cfg.n_heads, cfg.dh, cfg.ssm_state
+    from repro.distributed.sharding import shard_hint
+    v = shard_hint((x @ p["w_v"].astype(dt_)).reshape(B, S, H, dh),
+                   ("batch", "attn_seq", "heads", None))
+    bk = shard_hint((x @ p["w_B"].astype(dt_)).reshape(B, S, H, N),
+                    ("batch", "attn_seq", "heads", None))
+    cq = shard_hint((x @ p["w_C"].astype(dt_)).reshape(B, S, H, N),
+                    ("batch", "attn_seq", "heads", None))
+    delta = jax.nn.softplus(
+        (x @ p["w_dt"].astype(dt_)).astype(jnp.float32) + p["b_dt"])  # (B,S,H)
+    log_a = -delta * jnp.exp(p["A_log"])                 # (B,S,H) <= 0
+    v_in = v * delta[..., None].astype(dt_)              # fold Δ into v
+    return v, v_in, bk, cq, log_a
+
+
+def apply_mamba(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt_ = cfg.compute_dtype
+    x = x.astype(dt_)
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.dh
+    v, v_in, bk, cq, log_a = _mamba_proj(p, x, cfg)
+    chunk = min(cfg.ssm_chunk, S)
+    y, _ = chunked_linear_recurrence(cq, bk, v_in, log_a, chunk=chunk)
+    y = y + v * p["D_skip"].astype(dt_)
+    return y.reshape(B, S, H * dh) @ p["w_out"].astype(dt_)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    return init_linear_state(batch, cfg.n_heads, cfg.ssm_state, cfg.dh)
+
+
+def decode_mamba(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    dt_ = cfg.compute_dtype
+    x = x.astype(dt_)
+    B = x.shape[0]
+    H, dh = cfg.n_heads, cfg.dh
+    v, v_in, bk, cq, log_a = _mamba_proj(p, x, cfg)
+    y, state = decode_linear_step(state, cq[:, 0], bk[:, 0], v_in[:, 0],
+                                  jnp.exp(log_a[:, 0]))
+    y = y + v[:, 0] * p["D_skip"].astype(dt_)
+    return y.reshape(B, 1, H * dh) @ p["w_out"].astype(dt_), state

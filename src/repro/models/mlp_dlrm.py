@@ -1,0 +1,84 @@
+"""The paper's case study (§III): DLRM-style MLP tower, data-parallel.
+
+A stack of fully-connected layers O_l = f(W_l I_l + b_l) with feature width
+4096 (paper Fig. 4), trained data-parallel: each step's gradients are
+synchronized with an all-reduce whose wire volume the Ridgeline's B_N term
+captures.  The three GEMM phases the paper counts (forward, activation-grad,
+weight-grad) all appear in the jitted train step's HLO and are what
+``cost_analysis`` reports.
+
+``use_pallas_matmul`` routes the layer GEMMs through the Pallas
+fused-bias+ReLU blocked matmul kernel (the compute hotspot this paper's
+analysis centers on).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.common import ModelConfig, Params, Specs, dense_init, zeros
+
+
+def init_mlp(key, cfg: ModelConfig) -> Params:
+    widths = cfg.mlp_widths
+    ks = jax.random.split(key, len(widths))
+    layers = []
+    for i, k in enumerate(ks):
+        d_in = widths[i - 1] if i else widths[0]
+        layers.append({"w": dense_init(k, d_in, widths[i]),
+                       "b": zeros((widths[i],))})
+    head_key = jax.random.fold_in(key, 7)
+    return {"layers": layers,
+            "head": {"w": dense_init(head_key, widths[-1], 1), "b": zeros((1,))}}
+
+
+def mlp_specs(cfg: ModelConfig) -> Specs:
+    # pure data-parallel (the paper's deployment): weights replicated
+    layers = [{"w": (None, None), "b": (None,)} for _ in cfg.mlp_widths]
+    return {"layers": layers, "head": {"w": (None, None), "b": (None,)}}
+
+
+def forward(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x (B, d_in) -> logit (B,)."""
+    dt = cfg.compute_dtype
+    h = x.astype(dt)
+    h = shard_hint(h, ("batch", None))
+    if cfg.use_pallas_matmul:
+        from repro.kernels import ops as kops
+        for lyr in params["layers"]:
+            h = kops.matmul(h, lyr["w"].astype(dt), bias=lyr["b"].astype(dt),
+                            act="relu")
+    else:
+        for lyr in params["layers"]:
+            h = jax.nn.relu(h @ lyr["w"].astype(dt) + lyr["b"].astype(dt))
+    logit = h @ params["head"]["w"].astype(dt) + params["head"]["b"].astype(dt)
+    return logit[..., 0]
+
+
+def loss_fn(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """Binary cross-entropy (click-through objective of DLRM)."""
+    logit = forward(params, x, cfg).astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * y
+        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# --- analytic Ridgeline terms (paper §III accounting) ---------------------------
+
+def analytic_work_unit(batch: int, width: int, n_layers: int,
+                       dtype_bytes: int = 4) -> Tuple[float, float, float]:
+    """(F, B_M, B_N) per step for the paper's MLP accounting.
+
+    F   = 6 * B * W^2 * L      (fwd + act-grad + wgt-grad GEMMs, 2BW^2 each)
+    B_M = L * W^2 * dtype_bytes (weights read once per step — the paper's
+          Fig. 4a convention that puts the CLX ridge crossing at batch 32)
+    B_N = 2 * L * W^2 * dtype_bytes (ring all-reduce wire bytes of the grads)
+    """
+    F = 6.0 * batch * width * width * n_layers
+    B_M = float(n_layers) * width * width * dtype_bytes
+    B_N = 2.0 * float(n_layers) * width * width * dtype_bytes
+    return F, B_M, B_N

@@ -1,0 +1,144 @@
+"""Chunked scalar-decay linear recurrence (SSD form) — shared SSM substrate.
+
+One primitive serves both assigned recurrent families:
+
+  * xLSTM mLSTM blocks  — matrix memory C_t = f_t C_{t-1} + i_t k_t v_t^T,
+    y_t = (q_t C_t) / max(|q_t n_t|, 1) with normalizer n_t = f_t n_{t-1} + i_t k_t
+  * Hymba mamba heads   — h_t = a_t h_{t-1} + B_t x_t, y_t = C_t h_t
+    (Mamba-2/SSD per-head scalar decay; see DESIGN.md §hardware-adaptation for
+    why we use the SSD form rather than Mamba-1 per-channel diagonal A: the
+    chunked formulation is MXU-friendly — intra-chunk work is dense GEMMs —
+    where Mamba-1's per-element selective scan is a VPU-serial pattern.)
+
+Training/prefill use the *chunked* algorithm: O(T·L) memory, intra-chunk
+quadratic attention-like GEMMs + an inter-chunk ``lax.scan`` carrying the
+(dk × dv) state.  Decode is the exact sequential update on a constant-size
+state — this is what makes ``long_500k`` feasible for these families.
+
+Sequence-axis convention: inputs (B, T, H, d); decay is given as
+``log_decay`` (B, T, H) with values ≤ 0 (log of a forget factor in (0, 1]).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_recurrence(
+    q: jnp.ndarray,           # (B, T, H, dk)
+    k: jnp.ndarray,           # (B, T, H, dk)
+    v: jnp.ndarray,           # (B, T, H, dv)
+    log_decay: jnp.ndarray,   # (B, T, H)
+    chunk: int = 256,
+    normalize: bool = False,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Return (y (B,T,H,dv), final (M (B,H,dk,dv), n (B,H,dk)))."""
+    B, T, H, dk = k.shape
+    dv = v.shape[-1]
+    L = min(chunk, T)
+    while T % L:          # fall back to the largest divisor <= chunk
+        L -= 1
+    NC = T // L
+    f32 = jnp.float32
+
+    def split(x):  # (B, T, H, d) -> (NC, B, L, H, d)
+        return jnp.moveaxis(x.reshape(B, NC, L, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc = split(q), split(k), split(v)
+    la = jnp.moveaxis(log_decay.reshape(B, NC, L, H), 1, 0).astype(f32)
+    cum = jnp.cumsum(la, axis=2)                     # (NC, B, L, H) inclusive
+    total = cum[:, :, -1:, :]                        # (NC, B, 1, H)
+
+    # intra-chunk: D_ij = exp(cum_i - cum_j) for j <= i else 0
+    idx = jnp.arange(L)
+    tri = (idx[:, None] >= idx[None, :])             # (L, L) j <= i
+    # scores in compute dtype on the MXU; decay applied in fp32
+    scores = jnp.einsum("nbihd,nbjhd->nbhij", qc, kc)      # (NC,B,H,L,L)
+    diff = (cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+            - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+    # diff: (NC, B, H, L_i, L_j); mask BEFORE exp (future diffs are positive
+    # and would overflow)
+    diff = jnp.where(tri[None, None, None], diff, -jnp.inf)
+    dmat = jnp.exp(diff)
+    w = scores.astype(f32) * dmat
+    y_intra = jnp.einsum("nbhij,nbjhd->nbihd", w.astype(v.dtype), vc)
+    d_intra = None
+    if normalize:
+        d_intra = jnp.sum(w, axis=-1).transpose(0, 1, 3, 2)  # (NC,B,L,H)
+
+    # per-chunk summaries: M_c = sum_j exp(total - cum_j) k_j v_j^T
+    kdecay = jnp.exp(total - cum)                     # (NC, B, L, H)
+    kd = kc.astype(f32) * kdecay[..., None]
+    M_c = jnp.einsum("nblhd,nblhe->nbhde", kd, vc.astype(f32))  # (NC,B,H,dk,dv)
+    n_c = jnp.sum(kd, axis=2) if normalize else None  # (NC, B, H, dk)
+
+    if state is None:
+        M0 = jnp.zeros((B, H, dk, dv), f32)
+        n0 = jnp.zeros((B, H, dk), f32)
+    else:
+        M0, n0 = state
+
+    chunk_decay = jnp.exp(total[:, :, 0, :])          # (NC, B, H)
+
+    # Inter-chunk state composition via an ASSOCIATIVE scan over chunk
+    # summaries — not a sequential lax.scan: scanning would slice the big
+    # per-chunk tensors through scan xs, which defeats GSPMD sharding of the
+    # chunk axis (measured 2 GiB/layer -> ~0.3 GiB on xlstm-125m train_4k).
+    # Combine law for (a, M) with M_t = a_t M_{t-1} + Mc_t:
+    #   (a2, M2) ∘ (a1, M1) = (a1·a2, a2·M1 + M2)
+    def combine(left, right):
+        a1, m1, n1 = left
+        a2, m2, n2 = right
+        return (a1 * a2,
+                a2[:, :, :, None, None] * m1 + m2,
+                a2[:, :, :, None] * n1 + n2)
+
+    n_c_eff = n_c if normalize else jnp.zeros((NC, B, H, 1), f32)
+    a_in = jnp.concatenate([jnp.ones((1, B, H), f32), chunk_decay], axis=0)
+    M_in = jnp.concatenate([M0[None], M_c], axis=0)
+    n_in = jnp.concatenate(
+        [(n0 if normalize else jnp.zeros((B, H, 1), f32))[None], n_c_eff],
+        axis=0)
+    _, M_pref, n_pref = jax.lax.associative_scan(
+        combine, (a_in, M_in, n_in), axis=0)
+    Mf, nf = M_pref[-1], n_pref[-1]
+    M_prev, n_prev = M_pref[:-1], n_pref[:-1]          # exclusive prefixes
+
+    # inter-chunk contribution, fully batched over chunks
+    qdec = qc.astype(f32) * jnp.exp(cum)[..., None]    # (NC,B,L,H,dk)
+    y = y_intra.astype(f32) + jnp.einsum("nblhd,nbhde->nblhe", qdec, M_prev)
+    if normalize:
+        denom = d_intra + jnp.einsum("nblhd,nbhd->nblh", qdec, n_prev)
+        y = y / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+    y = jnp.moveaxis(y, 0, 1).reshape(B, T, H, dv)
+    return y.astype(v.dtype), (Mf, nf if normalize else n0)
+
+
+def decode_linear_step(
+    state: Tuple[jnp.ndarray, jnp.ndarray],   # M (B,H,dk,dv), n (B,H,dk)
+    q: jnp.ndarray,                           # (B, H, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,                           # (B, H, dv)
+    decay: jnp.ndarray,                       # (B, H) forget factor in (0,1]
+    normalize: bool = False,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Exact sequential update — O(1) per token, constant-size state."""
+    M, n = state
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    M = decay[..., None, None] * M + kf[..., :, None] * vf[..., None, :]
+    n = decay[..., None] * n + kf
+    y = jnp.einsum("bhd,bhde->bhe", qf, M)
+    if normalize:
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+        y = y / den[..., None]
+    return y.astype(v.dtype), (M, n)
+
+
+def init_linear_state(batch: int, heads: int, dk: int, dv: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return (jnp.zeros((batch, heads, dk, dv), jnp.float32),
+            jnp.zeros((batch, heads, dk), jnp.float32))

@@ -1,0 +1,209 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM: per-head matrix memory C_t = f_t C_{t-1} + i_t k_t v_t^T with
+normalizer n_t and output y_t = (q_t C_t) / max(|q_t n_t|, 1).  Training and
+prefill run the chunked SSD form (``repro.models.ssd``); decode runs the exact
+sequential update on constant-size state.
+
+Numerics deviation (recorded in DESIGN.md): the paper's exponential input
+gate with running-max stabilizer is replaced by bounded sigmoid gates
+(i_t = σ(ĩ), f_t = σ(f̃)).  The state equations and normalizer are otherwise
+the paper's; this is the standard stabilized variant used when the chunked
+parallel form must stay GEMM-shaped (the running-max recursion serializes).
+
+sLSTM: scalar state per head-channel with exponential gating and the paper's
+stabilizer state (m_t), run as an exact ``lax.scan`` over time — it has no
+parallel form (the paper motivates it exactly so: state mixing forbids it).
+
+Block layout follows the xLSTM paper: pre-LN residual blocks; mLSTM block
+has up-projection factor 2 with conv + gated output; sLSTM block is
+post-projected with a GeGLU-style FFN factor 4/3.  We keep the projections
+but omit the depthwise conv (stub'd as identity) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, Params, Specs, dense_init,
+                                 ones, zeros)
+from repro.models.ssd import (chunked_linear_recurrence, decode_linear_step,
+                              init_linear_state)
+
+PROJ_FACTOR = 2  # mLSTM up-projection (paper's p_f = 2)
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = PROJ_FACTOR * cfg.d_model
+    H = cfg.n_heads
+    return H, d_inner // H
+
+
+# --- mLSTM ---------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    H, dh = _heads(cfg)
+    d_inner = H * dh
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], cfg.d_model, d_inner),
+        "w_gate": dense_init(ks[1], cfg.d_model, d_inner),
+        "wq": dense_init(ks[2], d_inner, d_inner),
+        "wk": dense_init(ks[3], d_inner, d_inner),
+        "wv": dense_init(ks[4], d_inner, d_inner),
+        "w_if": dense_init(ks[5], d_inner, 2 * H),   # input+forget gate logits
+        "b_if": zeros((2 * H,)),
+        "skip_scale": ones((d_inner,)),
+        "w_down": dense_init(ks[6], d_inner, cfg.d_model),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "w_up": ("embed", "ffn"), "w_gate": ("embed", "ffn"),
+        "wq": ("ffn", "ffn"), "wk": ("ffn", "ffn"), "wv": ("ffn", "ffn"),
+        "w_if": ("ffn", None), "b_if": (None,),
+        "skip_scale": ("ffn",), "w_down": ("ffn", "embed"),
+    }
+
+
+def _mlstm_qkvg(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    from repro.distributed.sharding import shard_hint
+    dt = cfg.compute_dtype
+    H, dh = _heads(cfg)
+    B, S, _ = x.shape
+    u = shard_hint(x @ p["w_up"].astype(dt), ("batch", "seq", "ffn"))
+    z = jax.nn.silu(
+        shard_hint(x @ p["w_gate"].astype(dt), ("batch", "seq", "ffn")))
+    q = (u @ p["wq"].astype(dt)).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(dt)
+    k = (u @ p["wk"].astype(dt)).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(dt)
+    v = (u @ p["wv"].astype(dt)).reshape(B, S, H, dh)
+    gif = (u @ p["w_if"].astype(dt) + p["b_if"].astype(dt)).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gif[..., :H])              # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gif[..., H:])           # (B,S,H), <= 0
+    return u, z, q, k * i_gate[..., None].astype(dt), v, log_f
+
+
+def apply_mlstm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    B, S, _ = x.shape
+    H, dh = _heads(cfg)
+    u, z, q, k, v, log_f = _mlstm_qkvg(p, x, cfg)
+    chunk = min(cfg.ssm_chunk, S)
+    y, _ = chunked_linear_recurrence(q, k, v, log_f, chunk=chunk,
+                                     normalize=True)
+    y = y.reshape(B, S, H * dh) + u * p["skip_scale"].astype(dt)
+    return (y * z) @ p["w_down"].astype(dt)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H, dh = _heads(cfg)
+    return init_linear_state(batch, H, dh, dh)
+
+
+def decode_mlstm(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    """x: (B, 1, D) -> (y (B,1,D), new state)."""
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    B = x.shape[0]
+    H, dh = _heads(cfg)
+    u, z, q, k, v, log_f = _mlstm_qkvg(p, x, cfg)
+    y, state = decode_linear_step(
+        state, q[:, 0], k[:, 0], v[:, 0], jnp.exp(log_f[:, 0]),
+        normalize=True)
+    y = y.reshape(B, 1, H * dh) + u * p["skip_scale"].astype(dt)
+    return (y * z) @ p["w_down"].astype(dt), state
+
+
+# --- sLSTM ---------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        # recurrent weights are per-head block-diagonal in the paper; we use
+        # per-channel (diagonal) recurrence — the head-mixing happens in the
+        # post-FFN.  4 gates: i, f, z (cell input), o.
+        "w_x": dense_init(ks[0], D, 4 * D),
+        "r_diag": zeros((4, D)),          # diagonal recurrent weights
+        "b": zeros((4 * D,)),
+        "w_ffn_up": dense_init(ks[1], D, (4 * D) // 3 * 2),
+        "w_ffn_down": dense_init(ks[2], (4 * D) // 3, D),
+    }
+
+
+def slstm_specs(cfg: ModelConfig) -> Specs:
+    return {"w_x": ("embed", None), "r_diag": (None, "embed"), "b": (None,),
+            "w_ffn_up": ("embed", "ffn"), "w_ffn_down": ("ffn", "embed")}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 10.0}
+
+
+def _slstm_cell(p, state, xw, cfg: ModelConfig):
+    """One exact sLSTM step with exponential gating + stabilizer (paper eq. 9)."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    D = cfg.d_model
+    r = p["r_diag"].astype(jnp.float32)
+    gates = xw.astype(jnp.float32) + jnp.concatenate(
+        [h * r[0], h * r[1], h * r[2], h * r[3]], axis=-1) + p["b"].astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)                  # stabilizer state
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence sLSTM: exact scan over time + GeGLU post-FFN.
+
+    The recurrence is inherently sequential (the paper motivates sLSTM so);
+    memory is bounded by a two-level scan: an outer scan over time chunks
+    whose body is rematerialized — backward saves only one carry per chunk
+    and recomputes the ≤``ssm_chunk`` inner steps on the fly.
+    """
+    dt = cfg.compute_dtype
+    B, S, D = x.shape
+    L = min(cfg.ssm_chunk, S)
+    NC = S // L if S % L == 0 else 1
+    L = S // NC
+    xc = jnp.moveaxis(x.astype(dt).reshape(B, NC, L, D), 1, 0)  # (NC,B,L,D)
+    state0 = init_slstm_state(cfg, B)
+
+    def chunk_body(st, x_chunk):                       # x_chunk (B,L,D)
+        xw = x_chunk @ p["w_x"].astype(dt)             # (B,L,4D)
+
+        def step(st, xw_t):
+            st = _slstm_cell(p, st, xw_t, cfg)
+            return st, st["h"]
+
+        st, hs = jax.lax.scan(step, st, jnp.moveaxis(xw, 1, 0))
+        return st, jnp.moveaxis(hs, 0, 1)              # (B,L,D)
+
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_body), state0, xc)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(dt)
+    up = h @ p["w_ffn_up"].astype(dt)
+    a, b = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ p["w_ffn_down"].astype(dt)
+
+
+def decode_slstm(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    xw = x[:, 0].astype(dt) @ p["w_x"].astype(dt)
+    state = _slstm_cell(p, state, xw, cfg)
+    h = state["h"][:, None, :].astype(dt)
+    up = h @ p["w_ffn_up"].astype(dt)
+    a, b = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ p["w_ffn_down"].astype(dt), state

@@ -1,0 +1,96 @@
+"""InternVL2-style VLM backbone [arXiv:2404.16821].
+
+Per the brief, the InternViT frontend is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, N_vis, visual_width).  The backbone we
+build and shard is the InternLM2-20B-class LM (48L, d=6144, 48H GQA kv=8)
+plus the 2-layer MLP connector that projects ViT features into the LM width.
+Visual tokens are prepended to the text sequence; loss is computed on text
+positions only (the launcher's loss mask handles it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import transformer as lm
+from repro.models.common import (ModelConfig, Params, Specs, dense_init,
+                                 zeros)
+
+
+def init_vlm(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "lm": lm.init_lm(k1, cfg),
+        "connector": {
+            "w1": dense_init(k2, cfg.visual_width, cfg.d_model),
+            "b1": zeros((cfg.d_model,)),
+            "w2": dense_init(k3, cfg.d_model, cfg.d_model),
+            "b2": zeros((cfg.d_model,)),
+        },
+    }
+
+
+def vlm_specs(cfg: ModelConfig) -> Specs:
+    return {
+        "lm": lm.lm_specs(cfg),
+        "connector": {"w1": (None, "embed"), "b1": ("embed",),
+                      "w2": ("embed", "embed"), "b2": ("embed",)},
+    }
+
+
+def _project_visual(p: Params, patches: jnp.ndarray, cfg: ModelConfig
+                    ) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    c = p["connector"]
+    h = jax.nn.gelu(patches.astype(dt) @ c["w1"].astype(dt) + c["b1"].astype(dt))
+    return h @ c["w2"].astype(dt) + c["b2"].astype(dt)
+
+
+def forward(params: Params, tokens: jnp.ndarray, patches: jnp.ndarray,
+            cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(tokens (B,S_text), patches (B,N_vis,Dv)) -> logits over full seq.
+
+    Combined sequence = [visual tokens ; text tokens]; causal over the whole
+    thing (InternVL inserts image context ahead of the prompt).
+    """
+    dt = cfg.compute_dtype
+    vis = _project_visual(params, patches, cfg)               # (B, Nv, D)
+    txt = lm._embed(params["lm"], tokens, cfg)                # (B, S, D)
+    x = jnp.concatenate([vis, txt], axis=1)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+
+    # run the LM stack on pre-built embeddings: reuse the dense-block scan
+    aux = jnp.float32(0.0)
+
+    if cfg.scan_layers:
+        def body(carry, blk):
+            x, aux = carry
+            x, a = lm._maybe_remat(
+                lambda c, b: lm._apply_dense_block(b, c, cfg), cfg)(x, blk)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["lm"]["blocks"])
+    else:
+        for blk in params["lm"]["blocks"]:
+            x, a = lm._maybe_remat(
+                lambda c, b: lm._apply_dense_block(b, c, cfg), cfg)(x, blk)
+            aux = aux + a
+    from repro.models.common import apply_norm
+    x = apply_norm(params["lm"]["final_norm"], x, cfg)
+    head = (params["lm"]["embed"].T if cfg.tie_embeddings
+            else params["lm"]["lm_head"])
+    logits = x @ head.astype(dt)
+    return shard_hint(logits, ("batch", "seq", "vocab")), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return lm.init_cache(cfg, batch, max_len)
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, cache: Dict[str, Any],
+                pos: jnp.ndarray, cfg: ModelConfig):
+    """Decode rides the plain LM path (visual prefix already in the cache)."""
+    return lm.decode_step(params["lm"], tokens, cache, pos, cfg)

@@ -1,0 +1,131 @@
+"""Gradient compression for the DP sync — the paper's network-term lever.
+
+The Ridgeline case study's conclusion is that data-parallel training below a
+batch threshold is NETWORK bound: t_N = B_N / net_bw dominates.  These
+compressors shrink B_N (the all-reduce wire volume) at fixed model size:
+
+  * Int8Compressor — per-tensor-chunk scale + int8 quantization with ERROR
+    FEEDBACK (residual carried to the next step, Seide et al. / 1-bit SGD
+    lineage): 4x wire reduction vs fp32, provably convergent for smooth
+    objectives.
+  * TopKCompressor — keep the largest |g| fraction per tensor with error
+    feedback: wire ~ 2 * k * (4B idx + 4B val).
+
+``round_trip`` (compress -> decompress) is what the train step applies: in
+the SPMD formulation the all-reduce happens on the *decompressed* values, so
+round-tripping before the optimizer models the numerics exactly; on a real
+deployment the compressed payload is what crosses the wire (the int8 tensor
+all-reduces in int32/bf16 accumulation).  ``wire_fraction`` reports the B_N
+scale factor for the Ridgeline projection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class CompressorState(NamedTuple):
+    residual: Params      # error-feedback memory, fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Per-chunk symmetric int8 with error feedback."""
+
+    chunk: int = 4096
+
+    def init(self, params: Params) -> CompressorState:
+        return CompressorState(residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def compress(self, g: jnp.ndarray, r: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """g + r -> (q int8, scale, new residual)."""
+        x = g.astype(jnp.float32) + r
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        pad = (-n) % self.chunk
+        fp = jnp.pad(flat, (0, pad)).reshape(-1, self.chunk)
+        scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+        deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(x.shape)
+        return q, scale, x - deq
+
+    def round_trip_tree(self, grads: Params, state: CompressorState
+                        ) -> Tuple[Params, CompressorState]:
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            flat = x.reshape(-1)
+            n = flat.shape[0]
+            pad = (-n) % self.chunk
+            fp = jnp.pad(flat, (0, pad)).reshape(-1, self.chunk)
+            scale = jnp.maximum(
+                jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0, 1e-12)
+            q = jnp.clip(jnp.round(fp / scale), -127, 127)
+            deq = (q * scale).reshape(-1)[:n].reshape(x.shape)
+            return deq.astype(g.dtype), (x - deq)
+
+        out = jax.tree.map(one, grads, state.residual)
+        deq = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return deq, CompressorState(residual=res)
+
+    @property
+    def wire_fraction(self) -> float:
+        """int8 payload + fp32 scale per chunk vs fp32 baseline."""
+        return (1.0 + 4.0 / self.chunk) / 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Magnitude top-k with error feedback (k = keep fraction)."""
+
+    keep: float = 0.01
+
+    def init(self, params: Params) -> CompressorState:
+        return CompressorState(residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def round_trip_tree(self, grads: Params, state: CompressorState
+                        ) -> Tuple[Params, CompressorState]:
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            flat = x.reshape(-1)
+            k = max(1, int(flat.shape[0] * self.keep))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+            deq = kept.reshape(x.shape)
+            return deq.astype(g.dtype), (x - deq)
+
+        out = jax.tree.map(one, grads, state.residual)
+        deq = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return deq, CompressorState(residual=res)
+
+    @property
+    def wire_fraction(self) -> float:
+        return 2.0 * self.keep  # (idx + val) per kept entry vs dense fp32
+
+
+class StatelessRoundTrip:
+    """Adapter matching TrainStepConfig.compression (residual folded into a
+    step-held buffer is the stateful path; this stateless variant quantizes
+    without error feedback, for ablations)."""
+
+    def __init__(self, comp: Int8Compressor):
+        self.comp = comp
+
+    def round_trip(self, grads: Params) -> Params:
+        deq, _ = self.comp.round_trip_tree(
+            grads, self.comp.init(grads))
+        return deq

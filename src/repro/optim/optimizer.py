@@ -1,0 +1,120 @@
+"""Pure-JAX optimizers (no optax in the image): AdamW, SGD-momentum.
+
+Functional API mirroring optax: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; plus global-norm
+clipping and warmup-cosine schedules.  Optimizer state is fp32 regardless of
+param dtype (mixed-precision master copies live in the params themselves,
+which we keep fp32 — see models/common.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params
+    nu: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Params) -> AdamWState:
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=z,
+                          nu=jax.tree.map(jnp.copy, z))
+
+    def _lr(self, step: jnp.ndarray) -> jnp.ndarray:
+        if callable(self.learning_rate):
+            return jnp.asarray(self.learning_rate(step), jnp.float32)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads: Params, state: AdamWState, params: Params
+               ) -> Tuple[Params, AdamWState]:
+        step = state.step + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(m, v, p):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: float = 0.0
+
+    def init(self, params: Params) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mom = jax.tree.map(lambda m, g: self.momentum * m + g,
+                           state.momentum, grads)
+        lr = (self.learning_rate(step) if callable(self.learning_rate)
+              else self.learning_rate)
+        updates = jax.tree.map(lambda m, p: (-lr * m).astype(p.dtype), mom, params)
+        return updates, SGDState(step=step, momentum=mom)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule

@@ -1,0 +1,64 @@
+"""Serving: prefill + batched single-token decode (``serve_step``).
+
+``build_serve_step(cfg)`` returns the one-token decode function the
+``decode_*`` / ``long_*`` dry-run cells lower: given the params, the KV
+cache / recurrent state for a context of ``seq_len`` tokens, the current
+token batch and position, produce logits + the updated cache.  Greedy
+sampling helper included for the runnable demos.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as lm_mod
+from repro.models import vlm as vlm_mod
+from repro.models.common import ModelConfig
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        def serve_step(params, tokens, cache, pos):
+            logits, cache = encdec_mod.decode_step(params, tokens, cache,
+                                                   pos, cfg)
+            return logits, cache
+    elif cfg.family == "vlm":
+        def serve_step(params, tokens, cache, pos):
+            return vlm_mod.decode_step(params, tokens, cache, pos, cfg)
+    else:
+        def serve_step(params, tokens, cache, pos):
+            return lm_mod.decode_step(params, tokens, cache, pos, cfg)
+    return serve_step
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int,
+               frames: jnp.ndarray | None = None):
+    if cfg.family == "encdec":
+        assert frames is not None
+        return encdec_mod.init_encdec_cache(params, frames, batch, max_len, cfg)
+    if cfg.family == "vlm":
+        return vlm_mod.init_cache(cfg, batch, max_len)
+    return lm_mod.init_cache(cfg, batch, max_len)
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
+                    steps: int, max_len: int,
+                    frames: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Prefill token-by-token then greedy-decode ``steps`` tokens."""
+    B, S = prompt.shape
+    serve_step = jax.jit(build_serve_step(cfg))
+    cache = init_cache(params, cfg, B, max_len, frames=frames)
+    tok = prompt[:, :1]
+    out = [tok]
+    logits = None
+    for t in range(S + steps - 1):
+        logits, cache = serve_step(params, tok, cache, jnp.int32(t))
+        if t + 1 < S:
+            tok = prompt[:, t + 1:t + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

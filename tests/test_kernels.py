@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.blocked_matmul import blocked_matmul
+from repro.kernels.flash_attention import flash_attention_bhsd
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rel_err(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    denom = np.maximum(np.max(np.abs(want)), 1e-6)
+    return float(np.max(np.abs(got - want))) / denom
+
+
+class TestBlockedMatmul:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("mkn", [(512, 512, 512), (1024, 512, 512),
+                                     (512, 1024, 1536)])
+    def test_shapes_dtypes(self, dtype, mkn):
+        M, K, N = mkn
+        a = jax.random.normal(KEY, (M, K), dtype)
+        b = jax.random.normal(jax.random.fold_in(KEY, 1), (K, N), dtype)
+        got = blocked_matmul(a, b, interpret=True)
+        want = ref.ref_matmul(a, b)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        assert _rel_err(got, want) < tol
+
+    @pytest.mark.parametrize("act", [None, "relu", "relu2", "silu", "gelu"])
+    def test_fused_epilogue(self, act):
+        a = jax.random.normal(KEY, (512, 512), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(KEY, 2), (512, 512),
+                              jnp.float32)
+        bias = jax.random.normal(jax.random.fold_in(KEY, 3), (512,),
+                                 jnp.float32)
+        got = blocked_matmul(a, b, bias=bias, act=act, interpret=True)
+        want = ref.ref_matmul(a, b, bias=bias, act=act)
+        assert _rel_err(got, want) < 1e-5
+
+    def test_small_block_shapes(self):
+        a = jax.random.normal(KEY, (256, 384), jnp.float32)
+        b = jax.random.normal(KEY, (384, 256), jnp.float32)
+        got = blocked_matmul(a, b, block_m=128, block_n=128, block_k=128,
+                             interpret=True)
+        assert _rel_err(got, ref.ref_matmul(a, b)) < 1e-5
+
+    def test_wrapper_pads_odd_shapes(self):
+        a = jax.random.normal(KEY, (300, 700), jnp.float32)
+        b = jax.random.normal(KEY, (700, 520), jnp.float32)
+        got = ops.matmul(a, b, act="gelu")
+        assert _rel_err(got, ref.ref_matmul(a, b, act="gelu")) < 1e-5
+
+    def test_wrapper_leading_dims(self):
+        a = jax.random.normal(KEY, (4, 128, 512), jnp.float32)
+        b = jax.random.normal(KEY, (512, 512), jnp.float32)
+        got = ops.matmul(a, b)
+        assert got.shape == (4, 128, 512)
+        assert _rel_err(got, ref.ref_matmul(a.reshape(-1, 512), b)
+                        .reshape(4, 128, 512)) < 1e-5
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("cfg", [
+        dict(B=2, S=512, H=4, K=2, dh=64, causal=True, window=0),
+        dict(B=1, S=512, H=4, K=4, dh=128, causal=True, window=0),
+        dict(B=1, S=1024, H=8, K=2, dh=64, causal=True, window=256),
+        dict(B=2, S=512, H=6, K=3, dh=64, causal=False, window=0),
+    ])
+    def test_sweep(self, dtype, cfg):
+        B, S, H, K, dh = cfg["B"], cfg["S"], cfg["H"], cfg["K"], cfg["dh"]
+        q = jax.random.normal(KEY, (B, S, H, dh), dtype)
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, dh), dtype)
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, dh), dtype)
+        got = ops.flash_attention(q, k, v, causal=cfg["causal"],
+                                  window=cfg["window"])
+        want = ref.ref_flash_attention(q, k, v, causal=cfg["causal"],
+                                       window=cfg["window"])
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+        assert _rel_err(got, want) < tol
+
+    def test_unpadded_seq(self):
+        q = jax.random.normal(KEY, (1, 300, 4, 64), jnp.float32)
+        k = jax.random.normal(KEY, (1, 300, 2, 64), jnp.float32)
+        v = jax.random.normal(KEY, (1, 300, 2, 64), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True)
+        want = ref.ref_flash_attention(q, k, v, causal=True)
+        assert _rel_err(got, want) < 1e-4
+
+    def test_matches_model_attention(self):
+        """Kernel path == the model's jnp attention (apply_attention)."""
+        from repro.models.attention import apply_attention, init_attention
+        from repro.models.common import ModelConfig
+        cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=256,
+                          n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=32,
+                          compute_dtype=jnp.float32)
+        p = init_attention(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 512, 256), jnp.float32)
+        out_jnp = apply_attention(p, x, cfg)
+        out_flash = apply_attention(p, x, cfg.replace(use_flash=True))
+        assert _rel_err(out_flash, out_jnp) < 1e-4
+
+
+class TestFlashProperty:
+    @given(s_blocks=st.integers(1, 3), h=st.sampled_from([2, 4]),
+           kv=st.sampled_from([1, 2]), causal=st.booleans())
+    @settings(max_examples=8, deadline=None)
+    def test_random_shapes(self, s_blocks, h, kv, causal):
+        S = 256 * s_blocks
+        q = jax.random.normal(KEY, (1, S, h, 64), jnp.float32)
+        k = jax.random.normal(KEY, (1, S, kv, 64), jnp.float32)
+        v = jax.random.normal(KEY, (1, S, kv, 64), jnp.float32)
+        got = flash_attention_bhsd(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=causal, block_q=128, block_k=128,
+            interpret=True)
+        want = ref.ref_flash_attention(q, k, v, causal=causal)
+        assert _rel_err(jnp.swapaxes(got, 1, 2), want) < 1e-4

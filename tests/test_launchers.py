@@ -1,0 +1,24 @@
+"""The production launchers run end-to-end on CPU (reduced configs)."""
+import sys
+
+import pytest
+
+
+def test_train_launcher(tmp_path, capsys):
+    from repro.launch.train import main
+    rc = main(["--arch", "smollm-135m", "--reduced", "--steps", "12",
+               "--batch", "2", "--seq", "16", "--ckpt-dir", str(tmp_path),
+               "--ckpt-every", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "CE" in out and "bound" in out     # ran + ridgeline report
+    import os
+    assert any(n.startswith("step_") for n in os.listdir(tmp_path))
+
+
+def test_serve_launcher(capsys):
+    from repro.launch.serve import main
+    rc = main(["--arch", "smollm-135m", "--reduced", "--batch", "2",
+               "--prompt-len", "4", "--new-tokens", "6"])
+    assert rc == 0
+    assert "tok/s" in capsys.readouterr().out
