@@ -1,0 +1,22 @@
+# Developer entry points. `hypothesis` is an OPTIONAL dev dependency: the
+# property tests use it when installed and fall back to deterministic fixed
+# examples (tests/_hypothesis_compat.py) when not.
+
+PY ?= python
+
+.PHONY: test test-fast bench ci plan-demo
+
+test:            ## tier-1 gate: full suite, stop on first failure
+	$(PY) -m pytest -x -q
+
+test-fast:       ## skip the slow end-to-end tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:           ## paper-claim checks; nonzero exit on mismatch
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+ci: 	         ## what CI runs: tests then benchmarks
+	bash scripts/ci.sh
+
+plan-demo:
+	PYTHONPATH=src $(PY) examples/plan_demo.py

@@ -42,8 +42,34 @@ def main() -> int:
     (r6, d6), us = _timed(cs.fig6_ridgeline)
     rows.append(("fig6_ridgeline", us,
                  f"b256={d6['b256']};b1024={d6['b1024']};"
-                 f"xy512={d6['xy_at_512']:.0f};k*={d6['k_star']:.0f}"))
+                 f"xy512={d6['xy_at_512']:.0f};k*={d6['k_star']:.0f};"
+                 f"net_to_compute={d6['network_to_compute_between']}"))
     ok &= d6["b256"] == "network" and d6["b1024"] == "compute"
+    # sweep-engine path: the network->compute ridge crossing must land
+    # inside the paper's (256, 1024] bracket
+    span = d6["network_to_compute_between"]
+    ok &= span is not None and 256 <= span[0] and span[1] <= 1024
+
+    # parallelism planner: ranked (dp, tp) meshes for the case-study MLP
+    from repro.configs import get_config
+    from repro.core.hardware import get_hardware
+    from repro.launch import plan as plan_mod
+    cfg_mlp = get_config("dlrm-mlp")
+    plans, us = _timed(plan_mod.plan, cfg_mlp, get_hardware("tpu_v5e"), 16,
+                       batch=512)
+    rows.append(("planner_dlrm_16chips", us,
+                 f"best={plans[0].mesh};step_ms={plans[0].runtime * 1e3:.2f};"
+                 f"bottleneck={plans[0].bottleneck}"))
+    # substantive planner claims: on v5e the TP-heavy mesh must beat pure DP
+    # (smaller ring payload), and for a DP-friendly batch the best projected
+    # step time must be monotone non-increasing in chip count (ISSUE #1)
+    ok &= plans[0].runtime < max(p.runtime for p in plans if p.tp == 1)
+    clx = get_hardware("clx")
+    scaling, us = _timed(lambda: [plan_mod.best_step_time(
+        cfg_mlp, clx, n, batch=4096) for n in (1, 2, 4, 8, 16, 32, 64)])
+    rows.append(("planner_scaling_clx", us,
+                 "ms=" + "/".join(f"{t * 1e3:.1f}" for t in scaling)))
+    ok &= all(b <= a * (1 + 1e-9) for a, b in zip(scaling, scaling[1:]))
 
     terms, us = _timed(cs.compiled_terms, 512)
     ratio = terms["flops"] / terms["analytic_flops"]

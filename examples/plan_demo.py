@@ -1,0 +1,64 @@
+"""Plan a parallelism layout before touching any hardware.
+
+Three views of the same question — "how should I spread this model over a
+chip budget?" — all answered analytically (no accelerator, no jax tracing):
+
+  1. rank every feasible (dp, tp) mesh for the paper's DLRM MLP on 16 TPU
+     v5e chips, per collective algorithm;
+  2. sweep the batch axis against the best mesh to find where the step
+     leaves the network region (the paper's Fig. 6 question, generalized);
+  3. scaling curve: best projected step time vs chip count.
+
+    PYTHONPATH=src python examples/plan_demo.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import sweep as sweep_mod
+from repro.core.hardware import get_hardware
+from repro.distributed import collectives
+from repro.launch.plan import (best_step_time, format_plan_table,
+                               param_counts, plan)
+
+
+def main():
+    cfg = get_config("dlrm-mlp")
+    hw = get_hardware("tpu_v5e")
+    chips, batch = 16, 512
+
+    # 1. ranked meshes, all collective algorithms
+    plans = plan(cfg, hw, chips, batch=batch,
+                 algorithms=collectives.ALGORITHMS)
+    print(f"== {cfg.name}, batch {batch}, {chips}x {hw.name} ==")
+    print(format_plan_table(plans[:6]))
+    best = plans[0]
+
+    # 2. the paper's Fig. 6 question generalized: batch sweep of the same
+    #    MLP, pure DP over 16 CLX sockets — where does the step leave the
+    #    network region?
+    clx = get_hardware("clx")
+    batches = np.array([256, 512, 1024, 2048, 4096, 8192, 16384])
+    n_total, _ = param_counts(cfg)
+    flops = 6.0 * n_total * batches / 16
+    net = collectives.dp_grad_sync_bytes(n_total * 4.0, 16, "ring")
+    res = sweep_mod.sweep(flops, n_total * 4.0, net, clx)
+    labels = res.labels()
+    print("\n== batch sweep, dp16xtp1 on clx ==")
+    for i, b in enumerate(batches):
+        print(f"  batch {b:>5}: step {res.runtime[i] * 1e3:8.3f} ms  "
+              f"-> {labels[i]}")
+    for idx, frm, to in sweep_mod.transitions(res, batches):
+        print(f"  {frm} -> {to} between batch {batches[idx - 1]} "
+              f"and {batches[idx]}")
+
+    # 3. scaling curve
+    print("\n== best projected step time vs chips ==")
+    floor = best_step_time(cfg, hw, 128, batch=4096)
+    for n in (1, 2, 4, 8, 16, 32, 64, 128):
+        t = best_step_time(cfg, hw, n, batch=4096)
+        print(f"  {n:>4} chips: {t * 1e3:9.3f} ms  "
+              + "#" * max(1, int(t / floor)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate + paper-claim checks, exactly what CI (and `make ci`) runs.
+#   tests:  PYTHONPATH via pytest.ini (pythonpath = src .)
+#   bench:  benchmarks/run.py exits nonzero on any paper-claim mismatch
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run

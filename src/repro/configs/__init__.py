@@ -6,7 +6,7 @@ from repro.configs import (dlrm_mlp, hymba_1_5b, internvl2_26b, minitron_8b,
                            qwen3_moe_30b_a3b, smollm_135m, whisper_tiny,
                            xlstm_125m)
 from repro.configs.shapes import SHAPES, ShapeSpec, applicable, cells
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 _MODULES = [whisper_tiny, qwen2_5_3b, minitron_8b, smollm_135m, qwen2_7b,
             qwen2_moe_a2_7b, qwen3_moe_30b_a3b, xlstm_125m, internvl2_26b,

@@ -4,7 +4,7 @@ DLRM-style MLP tower: 8 fully-connected layers of width 4096 (the paper's
 "input output feature map size of 4096"), trained data-parallel with
 all-reduce gradient sync.  Batch is swept by the Fig. 4/6 benchmarks.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "dlrm-mlp"
 

@@ -4,7 +4,7 @@
 ssm_state=16.  Sliding-window attention (1024) everywhere except global
 layers (first / middle / last), per the paper's global+local pattern.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "hymba-1.5b"
 

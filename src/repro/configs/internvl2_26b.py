@@ -4,7 +4,7 @@ LM backbone: 48L, d_model=6144, 48H GQA kv=8, d_ff=16384, vocab=92553.
 Vision frontend stubbed: input_specs provides (B, 256, 3200) InternViT-6B
 patch embeddings; the 2-layer MLP connector projects them into the LM.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "internvl2-26b"
 

@@ -3,7 +3,7 @@
 32L, d_model=4096, 32H GQA kv=8, d_ff=16384, vocab=256000.
 Nemotron family: squared-ReLU MLP (non-gated), no QKV bias.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "minitron-8b"
 

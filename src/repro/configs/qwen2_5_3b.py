@@ -2,7 +2,7 @@
 
 36L, d_model=2048, 16H GQA kv=2, d_ff=11008, vocab=151936.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "qwen2.5-3b"
 

@@ -2,7 +2,7 @@
 
 28L, d_model=3584, 28H GQA kv=4, d_ff=18944, vocab=152064.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "qwen2-7b"
 

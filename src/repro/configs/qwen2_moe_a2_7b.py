@@ -4,7 +4,7 @@
 top-4 with per-expert d_ff=1408 + 4 shared experts (shared hidden 5632 =
 4x1408), QKV bias.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "qwen2-moe-a2.7b"
 

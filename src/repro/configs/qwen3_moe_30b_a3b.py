@@ -3,7 +3,7 @@
 48L, d_model=2048, 32H GQA kv=4 with explicit head_dim=128, QK-norm,
 vocab=151936; MoE: 128 routed experts top-8, per-expert d_ff=768, no shared.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "qwen3-moe-30b-a3b"
 

@@ -2,7 +2,7 @@
 
 30L, d_model=576, 9H GQA kv=3, d_ff=1536, vocab=49152, tied embeddings.
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "smollm-135m"
 

@@ -6,7 +6,7 @@ sinusoidal encoder positions, tied embeddings.  Encoder context fixed at
 1500 frames (3000-frame mel -> stride-2 conv stub).  The learned position
 table is resized to the requested shape for the 32k cells (DESIGN.md note).
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "whisper-tiny"
 

@@ -5,7 +5,7 @@
 recorded here).  No separate FFN — the blocks carry their own projections.
 Unrolled layers (shallow + heterogeneous; see transformer.py docstring).
 """
-from repro.models.common import ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH = "xlstm-125m"
 

@@ -6,6 +6,7 @@ Public API:
   classify_by_quadrant / classify_by_times — the two (equivalent) classifiers
   parse_collectives / analyze_compiled — HLO-derived work units
   CellReport / roofline_table — dry-run artifact schema + report emission
+  sweep / SweepResult — vectorized Ridgeline over whole scenario grids
 """
 from repro.core.hardware import CLX, TPU_V5E, HardwareSpec, get_hardware
 from repro.core.hlo_analysis import (CollectiveSummary, StepCosts,
@@ -16,7 +17,8 @@ from repro.core.ridgeline import (Resource, RidgelineAnalysis, WorkUnit,
                                   analyze, analyze_multilink, ascii_plot,
                                   classify_by_quadrant, classify_by_times,
                                   region_at, svg_plot)
-from repro.core import roofline
+from repro.core import roofline, sweep
+from repro.core.sweep import SweepResult
 
 __all__ = [
     "CLX", "TPU_V5E", "HardwareSpec", "get_hardware",
@@ -26,4 +28,5 @@ __all__ = [
     "Resource", "RidgelineAnalysis", "WorkUnit", "analyze",
     "analyze_multilink", "ascii_plot", "classify_by_quadrant",
     "classify_by_times", "region_at", "svg_plot", "roofline",
+    "sweep", "SweepResult",
 ]

@@ -325,12 +325,18 @@ def _memory_stats(mem_analysis) -> float:
         return 0.0
 
 
+def cost_analysis_dict(compiled) -> Dict:
+    """``compiled.cost_analysis()`` across jax versions (0.4.x: [dict])."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyze_compiled(compiled, num_devices: int,
                      pod_size: int = 0) -> StepCosts:
     """Build StepCosts from a ``jax.stages.Compiled`` object."""
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
-        cost = cost[0] if cost else {}
+    cost = cost_analysis_dict(compiled)
     flops, mem = _extract_cost(cost)
     hlo = compiled.as_text()
     coll = parse_collectives(hlo, num_devices, pod_size=pod_size)

@@ -1,0 +1,186 @@
+"""Vectorized Ridgeline sweeps: whole scenario grids in one NumPy pass.
+
+The scalar model (``core/ridgeline``) places one WorkUnit at a time; the
+paper's case study and the parallelism planner both need *surfaces* —
+bottleneck maps and projected-runtime grids over
+(batch × mesh × strategy × hardware × collective algorithm).  This module
+evaluates those grids with broadcast arithmetic instead of Python loops:
+every input of :func:`sweep` broadcasts against every other, so a
+``(n_batch, 1)`` flops column against a ``(1, n_mesh)`` net-bytes row yields
+the full 2-D map directly.
+
+Classification is the argmax of the three resource times with the same
+COMPUTE > MEMORY > NETWORK tie-break as the scalar path —
+``tests/test_sweep.py`` property-checks elementwise agreement with
+``repro.core.ridgeline.analyze``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+from repro.core.ridgeline import Resource
+
+ArrayLike = Union[float, np.ndarray]
+
+#: code order == argmax priority order (ties resolve to the earlier entry),
+#: matching the scalar classifier's COMPUTE > MEMORY > NETWORK convention
+RESOURCE_ORDER: Tuple[Resource, ...] = (
+    Resource.COMPUTE, Resource.MEMORY, Resource.NETWORK)
+RESOURCE_CODES: Dict[Resource, int] = {r: i for i, r in
+                                       enumerate(RESOURCE_ORDER)}
+_LABELS = np.array([r.value for r in RESOURCE_ORDER])
+
+
+def _safe_div(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorized twin of ridgeline._safe_div: x/0 -> inf (x>0) else 0."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    a, b = np.broadcast_arrays(a, b)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = np.where(b != 0, a / np.where(b != 0, b, 1.0),
+                       np.where(a > 0, np.inf, 0.0))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Every Ridgeline quantity, on the full broadcast grid."""
+
+    flops: np.ndarray
+    mem_bytes: np.ndarray
+    net_bytes: np.ndarray
+    t_compute: np.ndarray
+    t_memory: np.ndarray
+    t_network: np.ndarray
+    runtime: np.ndarray              # max of the three times (projected bound)
+    bottleneck: np.ndarray           # int8 codes into RESOURCE_ORDER
+    attained_flops: np.ndarray
+    peak_fraction: np.ndarray
+    x: np.ndarray                    # I_M = B_M / B_N
+    y: np.ndarray                    # I_A = F / B_M
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.runtime.shape
+
+    def labels(self) -> np.ndarray:
+        """Bottleneck names ('compute'|'memory'|'network') on the grid."""
+        return _LABELS[self.bottleneck]
+
+    def resources(self) -> np.ndarray:
+        """Bottlenecks as Resource enums (object array on the grid)."""
+        return np.array(RESOURCE_ORDER, dtype=object)[self.bottleneck]
+
+    def region_counts(self) -> Dict[str, int]:
+        lab, cnt = np.unique(self.bottleneck, return_counts=True)
+        return {RESOURCE_ORDER[int(l)].value: int(c)
+                for l, c in zip(lab, cnt)}
+
+
+def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
+          hw: Optional[HardwareSpec] = None, *,
+          peak_flops: Optional[ArrayLike] = None,
+          hbm_bw: Optional[ArrayLike] = None,
+          net_bw: Optional[ArrayLike] = None) -> SweepResult:
+    """Evaluate the Ridgeline on a broadcast grid of work units.
+
+    Machine peaks come either from ``hw`` (one spec for the whole grid) or
+    from explicit ``peak_flops``/``hbm_bw``/``net_bw`` arrays, which also
+    broadcast — sweeping *hardware* is just another grid axis.
+    """
+    if hw is not None:
+        peak_flops = hw.peak_flops if peak_flops is None else peak_flops
+        hbm_bw = hw.hbm_bw if hbm_bw is None else hbm_bw
+        net_bw = hw.net_bw if net_bw is None else net_bw
+    if peak_flops is None or hbm_bw is None or net_bw is None:
+        raise ValueError("pass hw= or all three of peak_flops/hbm_bw/net_bw")
+
+    f, bm, bn, pk, mb, nb = np.broadcast_arrays(
+        *(np.asarray(v, dtype=np.float64)
+          for v in (flops, mem_bytes, net_bytes, peak_flops, hbm_bw, net_bw)))
+    t_c = _safe_div(f, pk)
+    t_m = _safe_div(bm, mb)
+    t_n = _safe_div(bn, nb)
+    times = np.stack([t_c, t_m, t_n])       # axis 0 == RESOURCE_ORDER
+    runtime = times.max(axis=0)
+    # np.argmax returns the first maximal index -> the priority tie-break
+    bottleneck = times.argmax(axis=0).astype(np.int8)
+    attained = np.where(runtime > 0, _safe_div(f, runtime), 0.0)
+    return SweepResult(
+        flops=f, mem_bytes=bm, net_bytes=bn,
+        t_compute=t_c, t_memory=t_m, t_network=t_n,
+        runtime=runtime, bottleneck=bottleneck,
+        attained_flops=attained, peak_fraction=_safe_div(attained, pk),
+        x=_safe_div(bm, bn), y=_safe_div(f, bm))
+
+
+def grid(**axes: Sequence) -> Dict[str, np.ndarray]:
+    """Named meshgrid: 1-D axes -> broadcastable N-D coordinate arrays.
+
+    ``grid(batch=[...], dp=[...])`` returns arrays of shape
+    ``(len(batch), len(dp))`` in the keyword order given.
+    """
+    names = list(axes)
+    arrays = np.meshgrid(*(np.asarray(axes[n]) for n in names),
+                         indexing="ij")
+    return dict(zip(names, arrays))
+
+
+# --- ridge crossings ----------------------------------------------------------
+
+
+def crossover(xs: ArrayLike, t_a: ArrayLike, t_b: ArrayLike,
+              log_x: bool = False) -> Optional[float]:
+    """The x where the curves ``t_a`` and ``t_b`` cross (first sign change).
+
+    Linearly interpolates ``t_a − t_b`` between the bracketing samples
+    (in log-x when ``log_x``); exact when the difference is linear in x —
+    e.g. constant network time vs batch-linear compute time (Fig. 4c).
+    Returns None when the curves never cross on the sampled range.
+    """
+    xs = np.asarray(xs, dtype=np.float64)
+    d = np.asarray(t_a, dtype=np.float64) - np.asarray(t_b, dtype=np.float64)
+    sign = np.sign(d)
+    idx = np.nonzero(sign[:-1] * sign[1:] < 0)[0]
+    if idx.size == 0:
+        exact = np.nonzero(sign == 0)[0]
+        return float(xs[exact[0]]) if exact.size else None
+    i = int(idx[0])
+    x0, x1 = (math.log(xs[i]), math.log(xs[i + 1])) if log_x else \
+        (xs[i], xs[i + 1])
+    frac = d[i] / (d[i] - d[i + 1])
+    xc = x0 + frac * (x1 - x0)
+    return float(math.exp(xc)) if log_x else float(xc)
+
+
+def transitions(result: SweepResult, xs: Optional[ArrayLike] = None
+                ) -> List[Tuple[int, str, str]]:
+    """Bottleneck changes along a 1-D sweep: (index-after, from, to).
+
+    ``xs`` is unused for the indices but validates the sweep is 1-D and
+    aligned when provided.
+    """
+    labels = result.labels()
+    if labels.ndim != 1:
+        raise ValueError(f"transitions needs a 1-D sweep, got {labels.shape}")
+    if xs is not None and len(np.asarray(xs)) != labels.shape[0]:
+        raise ValueError("xs length does not match sweep length")
+    return [(i + 1, str(labels[i]), str(labels[i + 1]))
+            for i in range(labels.shape[0] - 1)
+            if labels[i] != labels[i + 1]]
+
+
+def ridge_crossing(result: SweepResult, xs: ArrayLike,
+                   a: Resource = Resource.NETWORK,
+                   b: Resource = Resource.COMPUTE,
+                   log_x: bool = True) -> Optional[float]:
+    """Interpolated x where resource ``a``'s time hands over to ``b``'s."""
+    times = {Resource.COMPUTE: result.t_compute,
+             Resource.MEMORY: result.t_memory,
+             Resource.NETWORK: result.t_network}
+    return crossover(xs, times[a], times[b], log_x=log_x)

@@ -1,3 +1,19 @@
-from repro.distributed.sharding import (DEFAULT_RULES, gqa_safe_rules,
-                                        logical_spec, shard_hint,
-                                        specs_to_shardings, use_sharding)
+"""Distributed substrate: logical-axis sharding + collective cost models.
+
+``collectives`` is pure NumPy; the sharding re-exports are lazy (PEP 562)
+so that analytic consumers (the sweep engine, the parallelism planner CLI)
+never pay the jax import just to price an all-reduce.
+"""
+from repro.distributed import collectives  # noqa: F401  (jax-free)
+
+_SHARDING_NAMES = ("DEFAULT_RULES", "gqa_safe_rules", "logical_spec",
+                   "shard_hint", "specs_to_shardings", "use_sharding")
+
+__all__ = list(_SHARDING_NAMES) + ["collectives"]
+
+
+def __getattr__(name):
+    if name in _SHARDING_NAMES:
+        from repro.distributed import sharding
+        return getattr(sharding, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,152 @@
+"""Analytic per-chip collective cost models (α–β accounting, vectorized).
+
+The Ridgeline's ``B_N`` term is *wire bytes sent per chip*; this module is
+the single source of those bytes for every collective the parallelism
+strategies use.  All functions are NumPy-vectorized: ``payload_bytes`` and
+``group_size`` broadcast against each other, so a whole sweep grid
+(batch × mesh × algorithm) evaluates in one call.
+
+Conventions (matching ``core/hlo_analysis`` and the literature, e.g.
+Chan et al. "Collective communication: theory, practice, and experience"
+and the NCCL ring/tree models):
+
+  * ``payload_bytes`` is the *logical result/input size* of the collective:
+    the full reduced tensor for all-reduce and reduce-scatter, the full
+    gathered tensor for all-gather, and the per-chip resident buffer for
+    all-to-all.
+  * ``group_size`` ``n`` may be a float; ``math.inf`` gives the paper's
+    large-n asymptote (the §III case study counts the ring all-reduce at
+    exactly 2·payload, i.e. n→∞).  ``n == 1`` degenerates to zero bytes
+    for every op/algorithm.
+  * Per-chip bytes count what each chip *sends* on its busiest link; the
+    bandwidth-optimal algorithms are link-balanced so this equals
+    received bytes.
+
+Per-chip wire bytes:
+
+  all-reduce     ring    2·(n−1)/n · payload     (reduce-scatter + all-gather)
+                 bidir   (n−1)/n · payload       (two half-payload rings)
+                 tree    2·payload (n>1)         (send up + forward down)
+  reduce-scatter ring    (n−1)/n · payload
+  all-gather     ring    (n−1)/n · payload
+  all-to-all     ring    (n−1)/n · payload
+
+Latency ``steps`` (serialized hops, the α term) are reported alongside for
+completeness; the Ridgeline itself is bandwidth-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+
+ArrayLike = Union[float, np.ndarray]
+
+#: supported all-reduce algorithm tags
+ALGORITHMS = ("ring", "bidir_ring", "tree")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    """Per-chip cost of one collective: bytes on the busiest link + hops."""
+
+    wire_bytes: ArrayLike
+    steps: ArrayLike
+
+    def time(self, link_bw: float) -> ArrayLike:
+        """Bandwidth-term time at ``link_bw`` bytes/s (α ignored)."""
+        return np.asarray(self.wire_bytes) / link_bw
+
+
+def _ring_factor(n: ArrayLike) -> np.ndarray:
+    """(n−1)/n with n=1 → 0 and n=inf → 1, elementwise."""
+    n = np.asarray(n, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        f = 1.0 - 1.0 / n
+    return np.where(n <= 1.0, 0.0, f)
+
+
+def _active(n: ArrayLike) -> np.ndarray:
+    """1.0 where the group actually communicates (n > 1), else 0.0."""
+    return np.where(np.asarray(n, dtype=np.float64) > 1.0, 1.0, 0.0)
+
+
+def _log2_steps(n: ArrayLike) -> np.ndarray:
+    n = np.asarray(n, dtype=np.float64)
+    with np.errstate(divide="ignore", over="ignore"):
+        return np.where(n > 1.0, np.ceil(np.log2(np.where(n > 1.0, n, 2.0))),
+                        0.0)
+
+
+def all_reduce(payload_bytes: ArrayLike, group_size: ArrayLike,
+               algorithm: str = "ring") -> CollectiveCost:
+    p = np.asarray(payload_bytes, dtype=np.float64)
+    n = np.asarray(group_size, dtype=np.float64)
+    if algorithm == "ring":
+        return CollectiveCost(2.0 * _ring_factor(n) * p,
+                              2.0 * np.maximum(n - 1.0, 0.0))
+    if algorithm == "bidir_ring":
+        # the payload is split across the two ring directions
+        return CollectiveCost(_ring_factor(n) * p, np.maximum(n - 1.0, 0.0))
+    if algorithm == "tree":
+        # pipelined binomial reduce + broadcast: each chip forwards the
+        # whole payload up and down once — n-independent bytes, log-n hops
+        return CollectiveCost(2.0 * _active(n) * p, 2.0 * _log2_steps(n))
+    raise ValueError(f"unknown all-reduce algorithm {algorithm!r}; "
+                     f"have {ALGORITHMS}")
+
+
+def reduce_scatter(payload_bytes: ArrayLike,
+                   group_size: ArrayLike) -> CollectiveCost:
+    p = np.asarray(payload_bytes, dtype=np.float64)
+    n = np.asarray(group_size, dtype=np.float64)
+    return CollectiveCost(_ring_factor(n) * p, np.maximum(n - 1.0, 0.0))
+
+
+def all_gather(payload_bytes: ArrayLike,
+               group_size: ArrayLike) -> CollectiveCost:
+    # identical wire profile to reduce-scatter (its mirror image)
+    return reduce_scatter(payload_bytes, group_size)
+
+
+def all_to_all(payload_bytes: ArrayLike,
+               group_size: ArrayLike) -> CollectiveCost:
+    """payload = per-chip resident bytes; each chip keeps 1/n of it local."""
+    return reduce_scatter(payload_bytes, group_size)
+
+
+def all_reduce_bytes(payload_bytes: ArrayLike, group_size: ArrayLike,
+                     algorithm: str = "ring") -> ArrayLike:
+    return all_reduce(payload_bytes, group_size, algorithm).wire_bytes
+
+
+# --- strategy-level accounting (what feeds WorkUnit.net_bytes) ----------------
+
+
+def dp_grad_sync_bytes(grad_bytes_per_chip: ArrayLike, dp: ArrayLike,
+                       algorithm: str = "ring") -> ArrayLike:
+    """Data parallel: one all-reduce of the local gradient shard per step."""
+    return all_reduce_bytes(grad_bytes_per_chip, dp, algorithm)
+
+
+def tp_act_sync_bytes(act_bytes: ArrayLike, tp: ArrayLike,
+                      syncs_per_layer: ArrayLike, n_layers: ArrayLike,
+                      algorithm: str = "ring") -> ArrayLike:
+    """Tensor parallel: activation all-reduces at block boundaries.
+
+    Megatron-style transformers sync 4×/layer (f+g, fwd+bwd over attn and
+    mlp blocks); a plain MLP tower syncs 2×/layer (fwd + bwd).
+    """
+    per = all_reduce_bytes(act_bytes, tp, algorithm)
+    return np.asarray(syncs_per_layer, np.float64) * \
+        np.asarray(n_layers, np.float64) * per
+
+
+def pp_boundary_bytes(act_bytes: ArrayLike, pp: ArrayLike) -> ArrayLike:
+    """Pipeline parallel: point-to-point activations at stage boundaries.
+
+    A middle stage sends the boundary activation forward and its gradient
+    backward each step: 2·act_bytes of sends per chip, zero when pp == 1.
+    """
+    return 2.0 * _active(pp) * np.asarray(act_bytes, dtype=np.float64)

@@ -1,0 +1,250 @@
+"""Parallelism planner: rank (dp, tp) meshes by Ridgeline-projected step time.
+
+``plan(cfg, hw, chips, ...)`` enumerates every feasible ``dp × tp``
+factorization of the chip budget, derives each candidate's per-chip
+Ridgeline terms analytically —
+
+  F    = 6 · N_active · tokens / (dp·tp)
+  B_M  = params_bytes/tp  +  2 · L · boundary_act_bytes      (weights + acts)
+  B_N  = DP grad all-reduce (params_bytes/tp over dp)
+         + TP activation all-reduces (2×/layer MLP, 4×/layer attention)
+
+— with the collective wire bytes coming from
+``repro.distributed.collectives`` under the chosen algorithm, then evaluates
+the whole candidate set in one :mod:`repro.core.sweep` pass and ranks by the
+projected bound runtime.  Everything is closed-form + ``jax.eval_shape``
+(for exact parameter counts), so planning needs no accelerator and runs in
+seconds.
+
+CLI::
+
+    python -m repro.launch.plan --arch dlrm-mlp --chips 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import sweep as sweep_mod
+from repro.core.hardware import HardwareSpec, get_hardware
+from repro.core.report import CellReport, roofline_table
+from repro.distributed import collectives
+
+if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
+    from repro.models.common import ModelConfig
+
+#: families with attention/MoE blocks -> Megatron-style 4 syncs per layer
+_ATTENTION_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """One ranked candidate: the mesh, its terms, and its projection."""
+
+    dp: int
+    tp: int
+    algorithm: str
+    flops: float                 # per chip
+    mem_bytes: float
+    net_bytes: float
+    t_compute: float
+    t_memory: float
+    t_network: float
+    runtime: float               # projected step time (bound)
+    bottleneck: str
+    peak_fraction: float
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.tp
+
+    @property
+    def mesh(self) -> str:
+        return f"dp{self.dp}xtp{self.tp}"
+
+
+def _factor_pairs(chips: int) -> List[Tuple[int, int]]:
+    return [(chips // t, t) for t in range(1, chips + 1) if chips % t == 0]
+
+
+def _model_width(cfg: ModelConfig) -> int:
+    return cfg.mlp_widths[0] if cfg.family == "mlp" else cfg.d_model
+
+
+def feasible_meshes(cfg: ModelConfig, chips: int,
+                    batch: int) -> List[Tuple[int, int]]:
+    """(dp, tp) with dp·tp == chips, dp | batch and tp | model width."""
+    width = _model_width(cfg)
+    return [(dp, tp) for dp, tp in _factor_pairs(chips)
+            if batch % dp == 0 and width % tp == 0]
+
+
+def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
+    """(total, active) parameter counts; closed-form for the MLP family.
+
+    The MLP tower is counted without jax so the planner CLI stays fast on a
+    bare CPU box; every other family defers to the eval_shape-exact
+    accounting in ``launch/specs``.
+    """
+    if cfg.family == "mlp":
+        widths = cfg.mlp_widths
+        n = 0.0
+        for i, w in enumerate(widths):
+            d_in = widths[i - 1] if i else widths[0]
+            n += d_in * w + w
+        n += widths[-1] * 1 + 1                     # head
+        return n, n
+    from repro.launch.specs import param_counts as exact
+    return exact(cfg)
+
+
+def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
+         batch: int, seq: int = 1,
+         algorithms: Sequence[str] = ("ring",)) -> List[MeshPlan]:
+    """Rank every feasible (dp, tp, algorithm) by projected step time."""
+    n_total, n_active = param_counts(cfg)
+    tokens = float(batch) if cfg.family == "mlp" else float(batch) * seq
+    width = _model_width(cfg)
+    act_dtype = 4 if cfg.family == "mlp" else 2     # fp32 MLP, bf16 LMs
+    syncs = 4.0 if cfg.family in _ATTENTION_FAMILIES else 2.0
+    params_bytes = n_total * 4.0                    # fp32 master weights
+
+    meshes = feasible_meshes(cfg, chips, batch)
+    if not meshes:
+        raise ValueError(
+            f"no feasible (dp, tp) for chips={chips}, batch={batch}, "
+            f"width={width}")
+    cands = [(dp, tp, algo) for dp, tp in meshes for algo in algorithms]
+    dp = np.array([c[0] for c in cands], dtype=np.float64)
+    tp = np.array([c[1] for c in cands], dtype=np.float64)
+
+    flops = 6.0 * n_active * tokens / (dp * tp)
+    act_bytes = (tokens / dp) * width * act_dtype   # one boundary activation
+    mem_bytes = params_bytes / tp + 2.0 * cfg.n_layers * act_bytes
+    net_bytes = np.empty_like(dp)
+    for i, (d, t, algo) in enumerate(cands):
+        net_bytes[i] = (
+            collectives.dp_grad_sync_bytes(params_bytes / t, d, algo)
+            + collectives.tp_act_sync_bytes(act_bytes[i], t, syncs,
+                                            cfg.n_layers, algo))
+    res = sweep_mod.sweep(flops, mem_bytes, net_bytes, hw)
+    labels = res.labels()
+
+    plans = [MeshPlan(dp=c[0], tp=c[1], algorithm=c[2],
+                      flops=float(res.flops[i]),
+                      mem_bytes=float(res.mem_bytes[i]),
+                      net_bytes=float(res.net_bytes[i]),
+                      t_compute=float(res.t_compute[i]),
+                      t_memory=float(res.t_memory[i]),
+                      t_network=float(res.t_network[i]),
+                      runtime=float(res.runtime[i]),
+                      bottleneck=str(labels[i]),
+                      peak_fraction=float(res.peak_fraction[i]))
+             for i, c in enumerate(cands)]
+    return sorted(plans, key=lambda p: (p.runtime, p.tp))
+
+
+def best_step_time(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
+                   batch: int, seq: int = 1,
+                   algorithms: Sequence[str] = ("ring",)) -> float:
+    return plan(cfg, hw, chips, batch=batch, seq=seq,
+                algorithms=algorithms)[0].runtime
+
+
+def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
+                    *, batch: int, tokens: float, params_total: float,
+                    params_active: float) -> List[CellReport]:
+    """Planner candidates as the standard per-cell report artifact."""
+    reports = []
+    for p in plans:
+        rep = CellReport(
+            arch=arch, shape=f"plan_b{batch}", mesh=p.mesh,
+            step_kind="train_step", num_devices=p.chips, hardware=hw.name,
+            flops=p.flops, mem_bytes=p.mem_bytes, wire_bytes=p.net_bytes,
+            wire_bytes_by_kind={"analytic-dp+tp": p.net_bytes},
+            peak_memory_per_device=0.0,
+            model_flops=6.0 * params_active * tokens,
+            params_total=params_total, params_active=params_active,
+            tokens_per_step=tokens, variant=p.algorithm,
+            notes=f"rank by plan; {p.algorithm}")
+        reports.append(rep.finalize(hw))
+    return reports
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s * 1e3:9.3f}"
+
+
+def format_plan_table(plans: Sequence[MeshPlan]) -> str:
+    head = (f"{'rank':>4} {'mesh':>12} {'algo':>10} {'t_comp ms':>9} "
+            f"{'t_mem ms':>9} {'t_net ms':>9} {'step ms':>9} "
+            f"{'bottleneck':>10} {'peak%':>6}")
+    lines = [head, "-" * len(head)]
+    for i, p in enumerate(plans):
+        lines.append(
+            f"{i + 1:>4} {p.mesh:>12} {p.algorithm:>10} "
+            f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
+            f"{_fmt_ms(p.t_network)} {_fmt_ms(p.runtime)} "
+            f"{p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.plan",
+        description="Rank (dp, tp) meshes by Ridgeline-projected step time.")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--chips", type=int, required=True)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="global batch (default: 512 MLP / 256 LM)")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--hardware", default="tpu_v5e",
+                    help="hardware preset (tpu_v5e, clx)")
+    ap.add_argument("--algo", default="ring",
+                    choices=list(collectives.ALGORITHMS) + ["all"])
+    ap.add_argument("--top", type=int, default=0,
+                    help="show only the best N candidates (0 = all)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, list_archs
+    try:
+        cfg = get_config(args.arch)
+    except KeyError:
+        print(f"unknown arch {args.arch!r}; have: {', '.join(list_archs())}",
+              file=sys.stderr)
+        return 2
+    hw = get_hardware(args.hardware)
+    batch = args.batch if args.batch is not None else (
+        512 if cfg.family == "mlp" else 256)
+    algos = collectives.ALGORITHMS if args.algo == "all" else (args.algo,)
+
+    try:
+        plans = plan(cfg, hw, args.chips, batch=batch, seq=args.seq,
+                     algorithms=algos)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    shown = plans[:args.top] if args.top else plans
+    tokens = float(batch) if cfg.family == "mlp" else float(batch) * args.seq
+    print(f"# {args.arch} on {args.chips}x {hw.name}, "
+          f"batch={batch}"
+          + ("" if cfg.family == "mlp" else f", seq={args.seq}")
+          + f", algo={args.algo}")
+    print(format_plan_table(shown))
+    n_total, n_active = param_counts(cfg)
+    print()
+    print(roofline_table(to_cell_reports(
+        args.arch, shown, hw, batch=batch, tokens=tokens,
+        params_total=n_total, params_active=n_active)))
+    best = plans[0]
+    print(f"\nbest: {best.mesh} ({best.algorithm}) -> "
+          f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Degraded-but-deterministic stand-in for ``hypothesis``.
+
+``hypothesis`` is an *optional* dev dependency (see pytest.ini).  When it is
+installed, this module re-exports the real ``given``/``settings``/``st`` and
+the property tests shrink failures as usual.  When it is missing, a minimal
+fixed-examples engine runs each ``@given`` body against a deterministic
+sample stream (seeded per test from the test's qualified name), so the suite
+still *collects and exercises* every property — it just loses shrinking and
+adaptive example generation.
+
+Only the strategy surface this repo's tests use is emulated:
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``one_of``,
+``just``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(lambda rng: rng.choice(strategies).example(rng))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False, **_ignored):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng: random.Random) -> float:
+                # log-uniform over wide positive ranges (the property tests
+                # span many orders of magnitude; uniform would never sample
+                # the small decades)
+                if lo > 0 and hi / lo > 1e3:
+                    return 10.0 ** rng.uniform(math.log10(lo), math.log10(hi))
+                return rng.uniform(lo, hi)
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+        def __init__(self, max_examples=20, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._compat_max_examples = self.max_examples
+            return fn
+
+    def given(**strategies):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", 20))
+                n = min(int(n), 100)  # fixed examples need no 500-deep sweep
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # NOT functools.wraps: pytest follows __wrapped__ to the original
+            # signature and would demand fixtures for the strategy kwargs
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return decorate

@@ -1,0 +1,84 @@
+"""Analytic collective cost models: algebraic identities + vectorization."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.distributed import collectives as coll
+
+
+class TestRingAllReduce:
+    def test_matches_2n1_over_n(self):
+        for n in (2, 4, 8, 16, 256):
+            got = coll.all_reduce_bytes(1e9, n, "ring")
+            assert got == pytest.approx(2.0 * (n - 1) / n * 1e9)
+
+    def test_large_n_asymptote_is_2x_payload(self):
+        assert coll.all_reduce_bytes(1e9, math.inf, "ring") == \
+            pytest.approx(2e9)
+
+    def test_n1_degenerates_to_zero(self):
+        for algo in coll.ALGORITHMS:
+            c = coll.all_reduce(1e9, 1, algo)
+            assert c.wire_bytes == 0.0 and c.steps == 0.0
+        assert coll.reduce_scatter(1e9, 1).wire_bytes == 0.0
+        assert coll.all_gather(1e9, 1).wire_bytes == 0.0
+        assert coll.all_to_all(1e9, 1).wire_bytes == 0.0
+
+    def test_steps(self):
+        assert coll.all_reduce(1.0, 8, "ring").steps == 14           # 2(n-1)
+        assert coll.all_reduce(1.0, 8, "bidir_ring").steps == 7
+        assert coll.all_reduce(1.0, 8, "tree").steps == 6            # 2log2 n
+
+
+class TestComposition:
+    def test_rs_plus_ag_is_ring_allreduce(self):
+        """Ring all-reduce *is* reduce-scatter + all-gather of the payload."""
+        p = np.array([1e6, 3e7, 5e9])
+        n = np.array([2, 7, 64])
+        composed = (coll.reduce_scatter(p, n).wire_bytes
+                    + coll.all_gather(p, n).wire_bytes)
+        np.testing.assert_allclose(
+            composed, coll.all_reduce_bytes(p, n, "ring"))
+
+    def test_bidir_halves_ring(self):
+        assert coll.all_reduce_bytes(8e8, 16, "bidir_ring") == \
+            pytest.approx(coll.all_reduce_bytes(8e8, 16, "ring") / 2)
+
+    def test_tree_is_n_independent(self):
+        assert coll.all_reduce_bytes(1e9, 4, "tree") == \
+            coll.all_reduce_bytes(1e9, 4096, "tree") == pytest.approx(2e9)
+
+    def test_unknown_algorithm_raises(self):
+        with pytest.raises(ValueError, match="unknown all-reduce"):
+            coll.all_reduce(1.0, 4, "quantum")
+
+
+class TestVectorization:
+    def test_broadcast_grid(self):
+        payload = np.array([[1e6], [1e9]])          # (2, 1)
+        n = np.array([1, 2, 8])                     # (3,)
+        got = coll.all_reduce_bytes(payload, n, "ring")
+        assert got.shape == (2, 3)
+        assert got[0, 0] == 0.0
+        assert got[1, 2] == pytest.approx(2 * 7 / 8 * 1e9)
+
+    def test_time_is_bytes_over_bw(self):
+        c = coll.all_reduce(1e9, 4, "ring")
+        assert c.time(50e9) == pytest.approx(c.wire_bytes / 50e9)
+
+
+class TestStrategyAccounting:
+    def test_dp_is_one_allreduce(self):
+        assert coll.dp_grad_sync_bytes(7e8, 16, "ring") == \
+            pytest.approx(coll.all_reduce_bytes(7e8, 16, "ring"))
+
+    def test_tp_scales_with_syncs_and_layers(self):
+        one = coll.all_reduce_bytes(1e6, 8, "ring")
+        assert coll.tp_act_sync_bytes(1e6, 8, 4, 32, "ring") == \
+            pytest.approx(4 * 32 * one)
+        assert coll.tp_act_sync_bytes(1e6, 1, 4, 32, "ring") == 0.0
+
+    def test_pp_boundary(self):
+        assert coll.pp_boundary_bytes(1e6, 1) == 0.0
+        assert coll.pp_boundary_bytes(1e6, 4) == pytest.approx(2e6)

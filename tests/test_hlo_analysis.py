@@ -98,13 +98,14 @@ class TestPerDeviceSemantics:
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
             import jax, jax.numpy as jnp
             from jax.sharding import NamedSharding, PartitionSpec as P
-            mesh = jax.make_mesh((8,), ("d",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((8,), ("d",))
             s = NamedSharding(mesh, P("d", None))
             x = jax.ShapeDtypeStruct((1024, 512), jnp.float32, sharding=s)
             w = jax.ShapeDtypeStruct((512, 256), jnp.float32)
             c = jax.jit(lambda x, w: x @ w).lower(x, w).compile()
-            flops = c.cost_analysis()["flops"]
+            from repro.core.hlo_analysis import cost_analysis_dict
+            flops = cost_analysis_dict(c)["flops"]
             total = 2 * 1024 * 512 * 256
             assert abs(flops - total / 8) / total < 0.01, flops
             print("PER_DEVICE_OK")
@@ -134,6 +135,7 @@ def test_scan_body_counted_once():
     scan = jax.jit(lambda x, w: jax.lax.scan(body, x, w)[0]).lower(x, w).compile()
     unroll = jax.jit(lambda x, w: jax.lax.scan(body, x, w, unroll=8)[0]
                      ).lower(x, w).compile()
-    f_scan = scan.cost_analysis()["flops"]
-    f_unroll = unroll.cost_analysis()["flops"]
+    from repro.core.hlo_analysis import cost_analysis_dict
+    f_scan = cost_analysis_dict(scan)["flops"]
+    f_unroll = cost_analysis_dict(unroll)["flops"]
     assert f_unroll == pytest.approx(8 * f_scan, rel=0.01)

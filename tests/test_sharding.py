@@ -23,15 +23,15 @@ def test_logical_spec_dedupes_mesh_axis():
 
 
 def test_drop_nondividing():
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((2, 2), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    mesh = make_abstract_mesh((2, 2), ("data", "model"))
     spec = _drop_nondividing(P("data", "model"), (10, 7), mesh)
     assert spec == P("data", None)    # 7 % 2 != 0
 
 
 def test_gqa_safe_rules():
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((1, 4), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    mesh = make_abstract_mesh((1, 4), ("data", "model"))
     rules = gqa_safe_rules(2, mesh)       # 2 kv heads % 4 != 0
     assert rules["kv_proj"] is None
     rules = gqa_safe_rules(4, mesh)

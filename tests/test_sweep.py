@@ -1,0 +1,133 @@
+"""Sweep engine vs the scalar Ridgeline, and the parallelism planner."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import CLX, TPU_V5E, WorkUnit, analyze
+from repro.core import sweep as sweep_mod
+from repro.core.ridgeline import Resource
+
+
+def _random_terms(n, seed=0):
+    """(F, B_M, B_N) spanning 8 orders of magnitude, with zero edge cases."""
+    rng = random.Random(seed)
+
+    def draw():
+        if rng.random() < 0.1:
+            return 0.0
+        return 10.0 ** rng.uniform(-2, 16)
+
+    return (np.array([draw() for _ in range(n)]),
+            np.array([draw() for _ in range(n)]),
+            np.array([draw() for _ in range(n)]))
+
+
+class TestAgainstScalarModel:
+    """The vectorized classifier must agree elementwise with analyze()."""
+
+    @pytest.mark.parametrize("hw", [CLX, TPU_V5E], ids=lambda h: h.name)
+    @pytest.mark.parametrize("seed", range(4))
+    def test_bottleneck_equals_scalar_argmax(self, hw, seed):
+        f, bm, bn = _random_terms(200, seed)
+        res = sweep_mod.sweep(f, bm, bn, hw)
+        labels = res.labels()
+        for i in range(len(f)):
+            a = analyze(WorkUnit("w", f[i], bm[i], bn[i]), hw)
+            assert labels[i] == a.bottleneck.value, (f[i], bm[i], bn[i])
+            if math.isfinite(a.runtime):
+                assert res.runtime[i] == pytest.approx(a.runtime)
+            assert res.peak_fraction[i] == pytest.approx(
+                a.peak_fraction, abs=1e-12)
+
+    def test_zero_work_unit(self):
+        res = sweep_mod.sweep(0.0, 0.0, 0.0, CLX)
+        assert res.labels() == "compute"          # degenerate tie-break
+        assert res.runtime == 0.0
+
+    def test_resources_enum_view(self):
+        res = sweep_mod.sweep([1e12, 1.0], [1.0, 1e12], [0.0, 0.0], CLX)
+        assert list(res.resources()) == [Resource.COMPUTE, Resource.MEMORY]
+
+
+class TestGridAndCrossings:
+    def test_grid_broadcast_shapes(self):
+        g = sweep_mod.grid(batch=[1, 2, 4], dp=[1, 2])
+        assert g["batch"].shape == g["dp"].shape == (3, 2)
+        assert g["dp"][0, 1] == 2
+
+    def test_2d_sweep_shape(self):
+        g = sweep_mod.grid(batch=[64, 512, 4096], dp=[1, 4, 16, 64])
+        res = sweep_mod.sweep(6e6 * g["batch"] / g["dp"], 1e9,
+                              1e8 * (1 - 1 / g["dp"]), CLX)
+        assert res.shape == (3, 4)
+        assert set(res.region_counts()) <= {"compute", "memory", "network"}
+
+    def test_crossover_linear_exact(self):
+        # constant vs linear: crossing at exactly x = 25
+        xs = np.array([10.0, 20.0, 40.0, 80.0])
+        assert sweep_mod.crossover(xs, np.full(4, 50.0), 2.0 * xs) == \
+            pytest.approx(25.0)
+
+    def test_crossover_none_when_no_crossing(self):
+        xs = np.array([1.0, 2.0, 3.0])
+        assert sweep_mod.crossover(xs, xs + 10.0, xs) is None
+
+    def test_fig4c_crossover_is_4_3_kstar(self):
+        """The paper-exact analytic crossover through the sweep engine."""
+        from benchmarks.paper_case_study import BATCHES, batch_sweep
+        res = batch_sweep(per_layer=False)
+        b_star = sweep_mod.ridge_crossing(res, BATCHES, log_x=False)
+        assert b_star == pytest.approx(4.0 / 3.0 * CLX.ridge_network)
+
+    def test_fig6_transition_bracket(self):
+        from benchmarks.paper_case_study import batch_sweep
+        batches = (256, 512, 1024, 2048)
+        trans = sweep_mod.transitions(batch_sweep(batches), batches)
+        assert ("network", "compute") in [(f, t) for _, f, t in trans]
+
+    def test_transitions_rejects_2d(self):
+        g = sweep_mod.grid(a=[1, 2], b=[1, 2])
+        res = sweep_mod.sweep(g["a"], g["b"], 1.0, CLX)
+        with pytest.raises(ValueError, match="1-D"):
+            sweep_mod.transitions(res)
+
+
+class TestPlanner:
+    @staticmethod
+    def _cfg():
+        from repro.configs import get_config
+        return get_config("dlrm-mlp")
+
+    def test_feasible_meshes_divisibility(self):
+        from repro.launch.plan import feasible_meshes
+        meshes = feasible_meshes(self._cfg(), 12, batch=8)
+        assert all(dp * tp == 12 for dp, tp in meshes)
+        assert all(8 % dp == 0 and 4096 % tp == 0 for dp, tp in meshes)
+        assert (12, 1) not in meshes            # 8 % 12 != 0
+
+    def test_ranked_by_runtime(self):
+        from repro.launch.plan import plan
+        plans = plan(self._cfg(), TPU_V5E, 16, batch=512,
+                     algorithms=("ring", "bidir_ring", "tree"))
+        times = [p.runtime for p in plans]
+        assert times == sorted(times)
+        assert all(p.runtime == pytest.approx(
+            max(p.t_compute, p.t_memory, p.t_network)) for p in plans)
+
+    def test_step_time_monotone_in_chips_for_dp_friendly_shape(self):
+        """More chips never hurt a large-batch (DP-friendly) MLP."""
+        from repro.launch.plan import best_step_time
+        cfg = self._cfg()
+        best = [best_step_time(cfg, CLX, chips, batch=4096)
+                for chips in (1, 2, 4, 8, 16, 32, 64)]
+        for a, b in zip(best, best[1:]):
+            assert b <= a * (1 + 1e-9), best
+
+    def test_cli_prints_ranked_table(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips", "16"]) == 0
+        out = capsys.readouterr().out
+        assert "rank" in out and "dp16xtp1" in out and "best:" in out
+        assert "bottleneck" in out and "| arch |" in out   # report emitted
