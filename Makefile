@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench ci plan-demo
+.PHONY: test test-fast bench ci plan-demo calibrate-smoke
 
 test:            ## tier-1 gate: full suite, stop on first failure
 	$(PY) -m pytest -x -q
@@ -15,7 +15,10 @@ test-fast:       ## skip the slow end-to-end tests
 bench:           ## paper-claim checks; nonzero exit on mismatch
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
-ci: 	         ## what CI runs: tests then benchmarks
+calibrate-smoke: ## measure this box + fit achievable ceilings (<60s, CPU)
+	PYTHONPATH=src $(PY) -m repro.measure.calibrate --backend cpu --smoke --devices 4
+
+ci: 	         ## what CI runs: tests, calibration smoke, benchmarks
 	bash scripts/ci.sh
 
 plan-demo:

@@ -1,20 +1,65 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's key
-claim, checked against the paper) and writes figure artifacts under
-``artifacts/figures``.  Paper-claim mismatches EXIT NONZERO.
+claim, checked against the paper), writes figure artifacts under
+``artifacts/figures``, and persists the whole run as ``BENCH_ridgeline.json``
+at the repo root — sweep-engine throughput plus the current calibration
+error summary — so later PRs have a perf baseline to diff against.
+Paper-claim mismatches EXIT NONZERO.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def _sweep_throughput(cells: int = 1 << 20) -> float:
+    """Sweep-engine cells/second on a cells-sized broadcast grid."""
+    import numpy as np
+
+    from repro.core import CLX
+    from repro.core import sweep as sweep_mod
+    side = int(cells ** 0.5)
+    flops = np.linspace(1e9, 1e13, side)[:, None]
+    net = np.linspace(1e6, 1e10, side)[None, :]
+    sweep_mod.sweep(flops, 1e9, net, CLX)           # warm the allocator
+    t0 = time.perf_counter()
+    res = sweep_mod.sweep(flops, 1e9, net, CLX)
+    dt = time.perf_counter() - t0
+    return res.runtime.size / dt
+
+
+def _calibration_summary():
+    """Error summary of the current calibration registry (None if empty)."""
+    from repro.core.hardware import calibration_dir, list_hardware
+    names = [n for n, src in list_hardware().items() if src == "calibrated"]
+    if not names:
+        return None
+    out = {}
+    for name in names:
+        with open(os.path.join(calibration_dir(), f"{name}.json")) as f:
+            d = json.load(f)
+        out[name] = {
+            "base": d.get("base"),
+            "estimator": d.get("estimator"),
+            "peak_flops": d["peak_flops"],
+            "hbm_bw": d["hbm_bw"],
+            "net_bw": d["net_bw"],
+            "sources": d.get("sources", {}),
+            "fit": d.get("fit", {}),
+            "validation": d.get("validation", {}),
+        }
+    return out
 
 
 def main() -> int:
@@ -100,6 +145,10 @@ def main() -> int:
     _, us = _timed(lambda: [analyze(w, CLX) for _ in range(1000)])
     rows.append(("ridgeline_analyze_x1000", us, "core-model-throughput"))
 
+    cells_per_s, us = _timed(_sweep_throughput)
+    rows.append(("sweep_engine_1m_cells", us,
+                 f"cells_per_s={cells_per_s:.3g}"))
+
     import jax, jax.numpy as jnp
     from repro.kernels import ops, ref
     a = jax.random.normal(jax.random.PRNGKey(0), (512, 512))
@@ -116,6 +165,20 @@ def main() -> int:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    # --- perf baseline for future PRs -----------------------------------------
+    bench_path = os.path.join(_REPO_ROOT, "BENCH_ridgeline.json")
+    with open(bench_path, "w") as f:
+        json.dump({
+            "schema": "repro.bench/v1",
+            "sweep_cells_per_s": cells_per_s,
+            "calibration": _calibration_summary(),
+            "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                     for n, us, d in rows],
+            "paper_claims_ok": bool(ok),
+        }, f, indent=1, sort_keys=True)
+    print(f"# wrote {bench_path}", file=sys.stderr)
+
     if not ok:
         print("PAPER-CLAIM MISMATCH", file=sys.stderr)
         return 1

@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 gate + paper-claim checks, exactly what CI (and `make ci`) runs.
-#   tests:  PYTHONPATH via pytest.ini (pythonpath = src .)
-#   bench:  benchmarks/run.py exits nonzero on any paper-claim mismatch
+# Tier-1 gate + calibration smoke + paper-claim checks — what `make ci` runs.
+#   tests:      PYTHONPATH via pytest.ini (pythonpath = src .)
+#   calibrate:  tiny-shape CPU measurement pass (<60s); refreshes
+#               artifacts/calibration so the bench below reports its errors
+#   bench:      benchmarks/run.py exits nonzero on any paper-claim mismatch
+#               and writes the BENCH_ridgeline.json perf baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.measure.calibrate --backend cpu --smoke --devices 4
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run

@@ -1,0 +1,19 @@
+"""repro — Ridgeline (2D distributed roofline) reproduction & growth.
+
+Layer map (jax-free unless noted):
+
+  core         the Ridgeline model, hardware specs (datasheet + calibrated),
+               vectorized sweeps, HLO cost parsing, report artifacts
+  configs      the architecture zoo (ModelConfig registry)
+  models       pure-jax functional model families              [jax]
+  kernels      Pallas kernels + jnp reference oracles          [jax]
+  distributed  sharding + analytic collective cost models
+  train/serve  step construction and decode engine             [jax]
+  optim/data/checkpoint  training substrate                    [jax]
+  launch       dry-run lowering, parallelism planner CLI
+  measure      wall-clock microbenchmarks + ceiling calibration
+
+Every subpackage is a real package (no namespace fallback) so tooling that
+walks ``repro.*`` — and ``python -m repro.<pkg>.<cli>`` — resolves them
+deterministically.
+"""

@@ -1,0 +1,1 @@
+"""Checkpointing (``checkpointer``) and elastic restore (``elastic``)."""

@@ -5,11 +5,26 @@ Ridgeline model (paper §II) needs: peak compute throughput, memory bandwidth,
 and network bandwidth — all *per compute entity* (chip / socket).  Multi-level
 networks (ICI within a pod, DCI between pods) are expressed as a dict of named
 network links so the multi-pod analysis can take per-axis terms.
+
+Specs come from two sources:
+
+  * **datasheet** presets (``PRESETS`` below) — vendor peaks, the classic
+    roofline inputs;
+  * **calibrated** specs — achievable ceilings fitted from real timings by
+    ``repro.measure.calibrate`` and persisted as JSON under
+    ``artifacts/calibration/``.  ``get_hardware(name, calibrated=True)``
+    resolves the calibrated twin of a datasheet preset;
+    ``list_hardware()`` enumerates both.
+
+This module stays jax- and numpy-free so the planner CLI and the sweep
+engine can resolve any spec without pulling in an accelerator runtime.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping
+import json
+import os
+from typing import Dict, Mapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,8 +104,126 @@ CLX = HardwareSpec(
 PRESETS: Dict[str, HardwareSpec] = {"tpu_v5e": TPU_V5E, "clx": CLX}
 
 
-def get_hardware(name: str) -> HardwareSpec:
+# --- calibration registry -----------------------------------------------------
+
+#: JSON schema tag written/required by the calibration registry
+CALIBRATION_SCHEMA = "repro.calibration/v1"
+
+#: suffix convention: the calibrated twin of preset ``clx`` is ``clx_cal``
+CALIBRATED_SUFFIX = "_cal"
+
+
+def calibration_dir(registry_dir: Optional[str] = None) -> str:
+    """Where calibrated specs live: explicit arg > env > repo default.
+
+    The default resolves relative to this source tree
+    (``<repo>/artifacts/calibration``) so CLIs work from any cwd.
+    """
+    if registry_dir is not None:
+        return registry_dir
+    env = os.environ.get("REPRO_CALIBRATION_DIR")
+    if env:
+        return env
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))   # src/repro/core -> repo
+    return os.path.join(root, "artifacts", "calibration")
+
+
+def spec_from_calibration(d: Mapping) -> HardwareSpec:
+    """Build a HardwareSpec from one calibration-registry JSON dict."""
+    schema = d.get("schema")
+    if schema != CALIBRATION_SCHEMA:
+        raise ValueError(
+            f"calibration entry {d.get('name')!r} has schema {schema!r}, "
+            f"expected {CALIBRATION_SCHEMA!r}")
+    return HardwareSpec(
+        name=str(d["name"]),
+        peak_flops=float(d["peak_flops"]),
+        hbm_bw=float(d["hbm_bw"]),
+        net_bw=float(d["net_bw"]),
+        extra_links={k: float(v)
+                     for k, v in dict(d.get("extra_links", {})).items()},
+        vmem_bytes=int(d.get("vmem_bytes", HardwareSpec.vmem_bytes)),
+    )
+
+
+def _read_calibration_entry(path: str) -> Optional[Dict]:
+    """One registry file as a dict, or None if unreadable/off-schema."""
     try:
+        with open(path) as f:
+            d = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(d, dict) or d.get("schema") != CALIBRATION_SCHEMA:
+        return None
+    return d
+
+
+def load_calibrated(name: str,
+                    registry_dir: Optional[str] = None) -> HardwareSpec:
+    """Load a calibrated spec by its own name or by its base preset's name.
+
+    Only ever raises KeyError on failure (corrupt or off-schema registry
+    entries are skipped), so callers can treat the registry like a dict.
+    """
+    cdir = calibration_dir(registry_dir)
+    candidates = [os.path.join(cdir, name + ".json"),
+                  os.path.join(cdir, name + CALIBRATED_SUFFIX + ".json")]
+    if os.path.isdir(cdir):
+        candidates += [os.path.join(cdir, fn)
+                       for fn in sorted(os.listdir(cdir))
+                       if fn.endswith(".json")]
+    for path in candidates:
+        d = _read_calibration_entry(path) if os.path.isfile(path) else None
+        if d is None:
+            continue
+        base = os.path.basename(path)[:-len(".json")]
+        if base == name or d.get("name") == name or d.get("base") == name:
+            return spec_from_calibration(d)
+    calibrated = sorted(n for n, src in list_hardware(registry_dir).items()
+                        if src == "calibrated")
+    raise KeyError(
+        f"no calibration for {name!r} under {cdir}; run "
+        f"`python -m repro.measure.calibrate` first "
+        f"(calibrated specs available: {calibrated or 'none'})")
+
+
+def list_hardware(registry_dir: Optional[str] = None) -> Dict[str, str]:
+    """All resolvable spec names -> source ('datasheet' | 'calibrated').
+
+    A registry entry whose name shadows a datasheet preset is skipped:
+    ``get_hardware`` would resolve that name to the preset, and listing it
+    as calibrated would misattribute the numbers.
+    """
+    out = {name: "datasheet" for name in PRESETS}
+    cdir = calibration_dir(registry_dir)
+    if os.path.isdir(cdir):
+        for fn in sorted(os.listdir(cdir)):
+            if not fn.endswith(".json"):
+                continue
+            d = _read_calibration_entry(os.path.join(cdir, fn))
+            if d is not None and "name" in d and d["name"] not in PRESETS:
+                out[str(d["name"])] = "calibrated"
+    return out
+
+
+def get_hardware(name: str, *, calibrated: bool = False,
+                 registry_dir: Optional[str] = None) -> HardwareSpec:
+    """Resolve a spec by name.
+
+    ``calibrated=True`` demands the measured twin (KeyError if never
+    calibrated).  With the default ``calibrated=False``, datasheet presets
+    win, but names only present in the calibration registry (e.g.
+    ``clx_cal``) still resolve — so every name in :func:`list_hardware` is
+    directly usable.
+    """
+    if calibrated:
+        return load_calibrated(name, registry_dir)
+    if name in PRESETS:
         return PRESETS[name]
-    except KeyError as e:
-        raise KeyError(f"unknown hardware preset {name!r}; have {sorted(PRESETS)}") from e
+    try:
+        return load_calibrated(name, registry_dir)
+    except KeyError:
+        pass
+    raise KeyError(f"unknown hardware spec {name!r}; "
+                   f"have {sorted(list_hardware(registry_dir))}")

@@ -54,6 +54,12 @@ class CellReport:
     #: TPU-corrected peak memory: raw minus half the CPU backend's bf16->f32
     #: upcast buffers (float-normalization artifact; see hlo_analysis)
     peak_memory_corrected: float = 0.0
+    # ---- empirical overlay (repro.measure): 0/"" until a clock has run ------
+    measured_runtime: float = 0.0     # wall seconds of the real step; the
+                                      # statistic (best/median) is named in
+                                      # measured_source
+    measured_rel_error: float = 0.0   # (model runtime − measured) / measured
+    measured_source: str = ""         # e.g. "calibrate:clx_cal@cpu/best"
 
     def finalize(self, hw: HardwareSpec) -> "CellReport":
         wu = WorkUnit(f"{self.arch}/{self.shape}", self.flops, self.mem_bytes,

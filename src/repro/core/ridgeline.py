@@ -214,12 +214,16 @@ def ascii_plot(
     height: int = 24,
     x_range: Optional[Tuple[float, float]] = None,
     y_range: Optional[Tuple[float, float]] = None,
+    point_notes: Optional[Mapping[str, str]] = None,
 ) -> str:
     """Log-log ASCII Ridgeline plot: region letters + labelled points.
 
     Regions: ``.`` network, ``-`` memory, ``+`` compute. Points: digits
-    indexing into ``analyses`` (shown in the legend).
+    indexing into ``analyses`` (shown in the legend).  ``point_notes`` maps
+    a work-unit name to an annotation appended to its legend line — the
+    measured-overlay path uses it for wall times and model error.
     """
+    point_notes = point_notes or {}
     finite = [a for a in analyses if math.isfinite(a.x) and math.isfinite(a.y)
               and a.x > 0 and a.y > 0]
     xs = [a.x for a in finite] + [hw.ridge_memory]
@@ -266,9 +270,10 @@ def ascii_plot(
         r, c = to_row(a.y), to_col(a.x)
         if 0 <= r < height and 0 <= c < width:
             grid[r][c] = ch
+        note = point_notes.get(a.work.name)
         legend.append(
             f"  [{ch}] {a.work.name}: ({a.x:.3g}, {a.y:.3g}) -> "
-            f"{a.bottleneck.value}"
+            f"{a.bottleneck.value}" + (f" | {note}" if note else "")
         )
 
     header = (
@@ -288,8 +293,14 @@ def svg_plot(
     hw: HardwareSpec,
     width: int = 640,
     height: int = 480,
+    point_notes: Optional[Mapping[str, str]] = None,
 ) -> str:
-    """Self-contained SVG Ridgeline plot (no plotting deps available)."""
+    """Self-contained SVG Ridgeline plot (no plotting deps available).
+
+    Points named in ``point_notes`` render as hollow "measured" markers with
+    the note under the label (used for model-vs-measured overlays).
+    """
+    point_notes = point_notes or {}
     finite = [a for a in analyses if a.x > 0 and a.y > 0
               and math.isfinite(a.x) and math.isfinite(a.y)]
     xs = [a.x for a in finite] + [hw.ridge_memory]
@@ -350,12 +361,25 @@ def svg_plot(
             'stroke="#2ca02c" stroke-dasharray="2"/>'
         )
     for a in finite:
+        note = point_notes.get(a.work.name)
+        if note is None:
+            parts.append(
+                f'<circle cx="{px(a.x):.1f}" cy="{py(a.y):.1f}" r="4" '
+                'fill="#333"/>')
+        else:
+            parts.append(
+                f'<circle cx="{px(a.x):.1f}" cy="{py(a.y):.1f}" r="5" '
+                'fill="none" stroke="#d62728" stroke-width="2" '
+                'class="measured"/>')
         parts.append(
-            f'<circle cx="{px(a.x):.1f}" cy="{py(a.y):.1f}" r="4" '
-            'fill="#333"/>'
             f'<text x="{px(a.x) + 6:.1f}" y="{py(a.y) - 6:.1f}" '
             f'font-size="10" font-family="monospace">{a.work.name}</text>'
         )
+        if note:
+            parts.append(
+                f'<text x="{px(a.x) + 6:.1f}" y="{py(a.y) + 6:.1f}" '
+                f'font-size="9" font-family="monospace" '
+                f'fill="#d62728">{note}</text>')
     parts.append(
         f'<text x="{width / 2:.0f}" y="{height - 12}" font-size="12" '
         'text-anchor="middle" font-family="monospace">'

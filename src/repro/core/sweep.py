@@ -22,10 +22,11 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.hardware import HardwareSpec
+from repro.core.hardware import HardwareSpec, get_hardware
 from repro.core.ridgeline import Resource
 
 ArrayLike = Union[float, np.ndarray]
+HardwareLike = Union[HardwareSpec, str]
 
 #: code order == argmax priority order (ties resolve to the earlier entry),
 #: matching the scalar classifier's COMPUTE > MEMORY > NETWORK convention
@@ -83,16 +84,20 @@ class SweepResult:
 
 
 def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
-          hw: Optional[HardwareSpec] = None, *,
+          hw: Optional[HardwareLike] = None, *,
           peak_flops: Optional[ArrayLike] = None,
           hbm_bw: Optional[ArrayLike] = None,
           net_bw: Optional[ArrayLike] = None) -> SweepResult:
     """Evaluate the Ridgeline on a broadcast grid of work units.
 
-    Machine peaks come either from ``hw`` (one spec for the whole grid) or
-    from explicit ``peak_flops``/``hbm_bw``/``net_bw`` arrays, which also
-    broadcast — sweeping *hardware* is just another grid axis.
+    Machine peaks come either from ``hw`` (one spec for the whole grid; a
+    string resolves through ``core.hardware.get_hardware``, so calibrated
+    registry names work anywhere a spec does) or from explicit
+    ``peak_flops``/``hbm_bw``/``net_bw`` arrays, which also broadcast —
+    sweeping *hardware* is just another grid axis.
     """
+    if isinstance(hw, str):
+        hw = get_hardware(hw)
     if hw is not None:
         peak_flops = hw.peak_flops if peak_flops is None else peak_flops
         hbm_bw = hw.hbm_bw if hbm_bw is None else hbm_bw

@@ -1,0 +1,1 @@
+"""Synthetic data pipelines feeding the train loop (``pipeline``)."""

@@ -1,0 +1,5 @@
+"""Launchers: dry-run lowering, train/serve entry points, mesh planner.
+
+``plan`` is the analytic parallelism planner CLI
+(``python -m repro.launch.plan``); it stays importable without jax.
+"""

@@ -19,18 +19,27 @@ seconds.
 CLI::
 
     python -m repro.launch.plan --arch dlrm-mlp --chips 16
+    python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
+    python -m repro.launch.plan --hardware list
+
+``--hardware`` accepts any name from ``core.hardware.list_hardware()``
+(datasheet presets and calibrated registry entries alike; ``list`` prints
+them); ``--calibrated`` swaps in the measured twin of the named preset, so
+rankings use achievable rather than vendor ceilings.  ``--json`` emits the
+full ranking machine-readably for scripting.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
 from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import sweep as sweep_mod
-from repro.core.hardware import HardwareSpec, get_hardware
+from repro.core.hardware import HardwareSpec, get_hardware, list_hardware
 from repro.core.report import CellReport, roofline_table
 from repro.distributed import collectives
 
@@ -197,18 +206,42 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.plan",
         description="Rank (dp, tp) meshes by Ridgeline-projected step time.")
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--chips", type=int, required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--chips", type=int)
     ap.add_argument("--batch", type=int, default=None,
                     help="global batch (default: 512 MLP / 256 LM)")
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--hardware", default="tpu_v5e",
-                    help="hardware preset (tpu_v5e, clx)")
+                    help="spec name (datasheet preset or calibrated registry "
+                         "entry), or 'list' to enumerate all of them")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="use the calibrated twin of --hardware "
+                         "(artifacts/calibration)")
     ap.add_argument("--algo", default="ring",
                     choices=list(collectives.ALGORITHMS) + ["all"])
     ap.add_argument("--top", type=int, default=0,
                     help="show only the best N candidates (0 = all)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output (full ranking + spec)")
     args = ap.parse_args(argv)
+
+    if args.hardware == "list":
+        specs = list_hardware()
+        if args.as_json:
+            print(json.dumps(
+                {name: {"source": src,
+                        **dataclasses.asdict(get_hardware(name))}
+                 for name, src in sorted(specs.items())}, indent=1))
+        else:
+            print(f"{'name':>16} {'source':>12} {'peak FLOP/s':>12} "
+                  f"{'HBM B/s':>10} {'NET B/s':>10}")
+            for name, src in sorted(specs.items()):
+                s = get_hardware(name)
+                print(f"{name:>16} {src:>12} {s.peak_flops:>12.3g} "
+                      f"{s.hbm_bw:>10.3g} {s.net_bw:>10.3g}")
+        return 0
+    if args.arch is None or args.chips is None:
+        ap.error("--arch and --chips are required (unless --hardware list)")
 
     from repro.configs import get_config, list_archs
     try:
@@ -217,7 +250,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"unknown arch {args.arch!r}; have: {', '.join(list_archs())}",
               file=sys.stderr)
         return 2
-    hw = get_hardware(args.hardware)
+    try:
+        hw = get_hardware(args.hardware, calibrated=args.calibrated)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
     batch = args.batch if args.batch is not None else (
         512 if cfg.family == "mlp" else 256)
     algos = collectives.ALGORITHMS if args.algo == "all" else (args.algo,)
@@ -230,6 +267,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 2
     shown = plans[:args.top] if args.top else plans
     tokens = float(batch) if cfg.family == "mlp" else float(batch) * args.seq
+    if args.as_json:
+        def plan_dict(p: MeshPlan) -> dict:
+            return {"mesh": p.mesh, "chips": p.chips,
+                    **dataclasses.asdict(p)}
+
+        print(json.dumps({
+            "arch": args.arch, "chips": args.chips, "batch": batch,
+            "seq": None if cfg.family == "mlp" else args.seq,
+            "algorithms": list(algos),
+            "hardware": {"source": "calibrated" if args.calibrated
+                         else list_hardware().get(hw.name, "datasheet"),
+                         **dataclasses.asdict(hw)},
+            "plans": [plan_dict(p) for p in shown],
+            "best": plan_dict(plans[0]),
+        }, indent=1))
+        return 0
     print(f"# {args.arch} on {args.chips}x {hw.name}, "
           f"batch={batch}"
           + ("" if cfg.family == "mlp" else f", seq={args.seq}")

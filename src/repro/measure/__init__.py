@@ -1,0 +1,30 @@
+"""Empirical measurement & calibration: the model <-> hardware loop.
+
+``timers`` (robust wall clocks) -> ``microbench`` ((WorkUnit, seconds)
+pairs) -> ``calibrate`` (achievable PEAK/HBM/NET ceilings + JSON registry)
+-> ``overlay`` (measured dots and model error on reports and figures).
+
+Re-exports are lazy (PEP 562) so importing the package never imports the
+submodules; the benches import jax lazily on top of that, letting the
+calibrate CLI pin the backend/device count before jax initializes.
+"""
+_EXPORTS = {
+    "Calibration": "repro.measure.calibrate",
+    "fit_ceilings": "repro.measure.calibrate",
+    "Measurement": "repro.measure.microbench",
+    "default_suite": "repro.measure.microbench",
+    "TimingStats": "repro.measure.timers",
+    "robust_stats": "repro.measure.timers",
+    "time_callable": "repro.measure.timers",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)

@@ -1,0 +1,352 @@
+"""Fit achievable PEAK/HBM/NET ceilings from measured (WorkUnit, seconds).
+
+The Ridgeline's projection is ``t = max(F/PEAK, B_M/HBM, B_N/NET)``; the
+datasheet presets in ``core/hardware`` put vendor peaks on the right-hand
+side, which makes every projection a *lower* bound — often a loose one.
+Following the time-based-roofline line of work (Wang et al.), this module
+replaces the vendor peaks with the ceilings the machine actually achieves:
+
+  1. assign each measurement to its bottleneck resource under the current
+     ceilings (the argmax in the time model),
+  2. per resource, solve the 1-D least-squares ``t ≈ q · (1/peak)`` over the
+     assigned points (closed form: ``1/peak = Σ q·t / Σ q²``),
+  3. repeat until the assignment is a fixed point (a Lloyd-style alternation
+     that converges in a handful of rounds).
+
+A resource with no assigned points keeps its prior ceiling and is reported
+as ``datasheet`` rather than ``measured`` — e.g. NET on a single-device
+host where there is no wire to time.
+
+The result persists as one JSON file per spec under
+``artifacts/calibration/`` (schema ``repro.calibration/v1``); the loader
+side lives in ``core/hardware`` so any consumer can
+``get_hardware(name, calibrated=True)`` without importing jax.
+
+CLI::
+
+    python -m repro.measure.calibrate --backend cpu --smoke
+    python -m repro.measure.calibrate --backend cpu --devices 4 --hardware clx
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.hardware import (CALIBRATED_SUFFIX, CALIBRATION_SCHEMA,
+                                 HardwareSpec, calibration_dir, get_hardware)
+from repro.measure.microbench import Measurement
+
+_RESOURCES = ("peak_flops", "hbm_bw", "net_bw")
+
+#: which wall-time statistic a calibration trusts per bench:
+#: 'best' (fastest sample — robust to contention on shared boxes, the
+#: classic bandwidth-benchmark convention) or 'median' (typical operating
+#: point, right for dedicated nodes)
+ESTIMATORS = ("best", "median")
+
+
+def _quantities(m: Measurement) -> Tuple[float, float, float]:
+    return (m.work.flops, m.work.mem_bytes, m.work.net_bytes)
+
+
+def _observed(m: Measurement, estimator: str) -> float:
+    return m.best if estimator == "best" else m.seconds
+
+
+def _model_seconds(m: Measurement, peaks: Sequence[float]) -> float:
+    return max((q / p if p > 0 else 0.0)
+               for q, p in zip(_quantities(m), peaks))
+
+
+def _assign(m: Measurement, peaks: Sequence[float]) -> int:
+    times = [(q / p if p > 0 else 0.0)
+             for q, p in zip(_quantities(m), peaks)]
+    return max(range(3), key=lambda r: (times[r], -r))
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Fitted achievable ceilings + the evidence behind them."""
+
+    name: str
+    base: HardwareSpec
+    peak_flops: float
+    hbm_bw: float
+    net_bw: float
+    sources: Dict[str, str]          # resource -> 'measured' | 'datasheet'
+    iterations: int
+    fit_measurements: Tuple[Measurement, ...]
+    validation_measurements: Tuple[Measurement, ...] = ()
+    estimator: str = "best"          # see ESTIMATORS
+
+    @property
+    def peaks(self) -> Tuple[float, float, float]:
+        return (self.peak_flops, self.hbm_bw, self.net_bw)
+
+    def spec(self) -> HardwareSpec:
+        """The calibrated HardwareSpec (extra links scale with NET)."""
+        scale = self.net_bw / self.base.net_bw if self.base.net_bw else 1.0
+        return HardwareSpec(
+            name=self.name,
+            peak_flops=self.peak_flops,
+            hbm_bw=self.hbm_bw,
+            net_bw=self.net_bw,
+            extra_links={k: v * scale
+                         for k, v in self.base.extra_links.items()},
+            vmem_bytes=self.base.vmem_bytes,
+        )
+
+    # ---- model-vs-measured error --------------------------------------------
+    def model_seconds(self, m: Measurement) -> float:
+        return _model_seconds(m, self.peaks)
+
+    def observed_seconds(self, m: Measurement) -> float:
+        return _observed(m, self.estimator)
+
+    def rel_error(self, m: Measurement) -> float:
+        """(model − measured) / measured: negative = model under-predicts."""
+        obs = self.observed_seconds(m)
+        return (self.model_seconds(m) - obs) / obs
+
+    def errors(self, which: str = "all") -> Dict[str, float]:
+        ms = {"fit": self.fit_measurements,
+              "validation": self.validation_measurements,
+              "all": self.fit_measurements + self.validation_measurements,
+              }[which]
+        return {m.work.name: self.rel_error(m) for m in ms}
+
+    def error_summary(self, which: str = "all") -> Dict[str, float]:
+        errs = sorted(abs(e) for e in self.errors(which).values())
+        if not errs:
+            return {"n": 0, "median_abs_rel_error": 0.0,
+                    "max_abs_rel_error": 0.0}
+        mid = len(errs) // 2
+        median = errs[mid] if len(errs) % 2 else \
+            0.5 * (errs[mid - 1] + errs[mid])
+        return {"n": len(errs), "median_abs_rel_error": median,
+                "max_abs_rel_error": errs[-1]}
+
+    # ---- persistence ---------------------------------------------------------
+    def to_dict(self) -> Dict:
+        def dump(ms: Sequence[Measurement]) -> List[Dict]:
+            out = []
+            for m in ms:
+                d = m.to_dict()
+                d["assigned"] = _RESOURCES[_assign(m, self.peaks)]
+                d["model_seconds"] = self.model_seconds(m)
+                d["rel_error"] = self.rel_error(m)
+                out.append(d)
+            return out
+
+        return {
+            "schema": CALIBRATION_SCHEMA,
+            "name": self.name,
+            "base": self.base.name,
+            "estimator": self.estimator,
+            "peak_flops": self.peak_flops,
+            "hbm_bw": self.hbm_bw,
+            "net_bw": self.net_bw,
+            "extra_links": dict(self.spec().extra_links),
+            "vmem_bytes": self.base.vmem_bytes,
+            "sources": dict(self.sources),
+            "datasheet": {"peak_flops": self.base.peak_flops,
+                          "hbm_bw": self.base.hbm_bw,
+                          "net_bw": self.base.net_bw},
+            "fit": {"iterations": self.iterations,
+                    **self.error_summary("fit")},
+            "validation": self.error_summary("validation"),
+            "measurements": dump(self.fit_measurements),
+            "validation_measurements": dump(self.validation_measurements),
+        }
+
+    def save(self, registry_dir: Optional[str] = None) -> str:
+        from repro.core.hardware import PRESETS
+        if self.name in PRESETS:
+            raise ValueError(
+                f"calibration name {self.name!r} shadows a datasheet preset "
+                f"(get_hardware would never resolve it); pick another, e.g. "
+                f"{self.name + CALIBRATED_SUFFIX!r}")
+        cdir = calibration_dir(registry_dir)
+        os.makedirs(cdir, exist_ok=True)
+        path = os.path.join(cdir, f"{self.name}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    def summary(self) -> str:
+        lines = [f"calibration {self.name} (base {self.base.name}, "
+                 f"estimator {self.estimator}, "
+                 f"{self.iterations} fit iterations)"]
+        datasheet = (self.base.peak_flops, self.base.hbm_bw, self.base.net_bw)
+        for r, fitted, ds in zip(_RESOURCES, self.peaks, datasheet):
+            lines.append(
+                f"  {r:>10}: {fitted:.4g} ({self.sources[r]}; datasheet "
+                f"{ds:.4g}, x{fitted / ds:.3f})")
+        for which in ("fit", "validation"):
+            s = self.error_summary(which)
+            if s["n"]:
+                lines.append(
+                    f"  {which}: n={s['n']} median |rel err| "
+                    f"{100 * s['median_abs_rel_error']:.1f}% max "
+                    f"{100 * s['max_abs_rel_error']:.1f}%")
+        return "\n".join(lines)
+
+
+def load_calibration_dict(name: str,
+                          registry_dir: Optional[str] = None) -> Dict:
+    """The raw registry JSON for ``name`` (spec loading lives in hardware)."""
+    path = os.path.join(calibration_dir(registry_dir), f"{name}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def fit_ceilings(measurements: Sequence[Measurement],
+                 base: HardwareSpec, *,
+                 name: Optional[str] = None,
+                 validation: Sequence[Measurement] = (),
+                 estimator: str = "best",
+                 max_iterations: int = 32) -> Calibration:
+    """Alternating assign/least-squares fit of the three ceilings.
+
+    ``measurements`` drive the fit; ``validation`` points (e.g. whole model
+    steps) only contribute to the reported error.  Initialization is the
+    datasheet ``base``, so resources with no informative measurements keep
+    their vendor numbers.  ``estimator`` picks the wall-time statistic
+    (see :data:`ESTIMATORS`).
+    """
+    if not measurements:
+        raise ValueError("need at least one measurement to fit")
+    if estimator not in ESTIMATORS:
+        raise ValueError(f"estimator {estimator!r} not in {ESTIMATORS}")
+    peaks = [base.peak_flops, base.hbm_bw, base.net_bw]
+    assignment: Optional[List[int]] = None
+    iterations = 0
+    for _ in range(max_iterations):
+        iterations += 1
+        new_assignment = [_assign(m, peaks) for m in measurements]
+        if new_assignment == assignment:
+            break
+        assignment = new_assignment
+        for r in range(3):
+            num = 0.0
+            den = 0.0
+            for m, a in zip(measurements, assignment):
+                if a != r:
+                    continue
+                q = _quantities(m)[r]
+                num += q * _observed(m, estimator)
+                den += q * q
+            if den > 0 and num > 0:
+                peaks[r] = den / num      # 1/peak = Σqt/Σq² -> peak = Σq²/Σqt
+    assignment = [_assign(m, peaks) for m in measurements]
+    sources = {res: ("measured" if any(a == r for a in assignment)
+                     else "datasheet")
+               for r, res in enumerate(_RESOURCES)}
+    return Calibration(
+        name=name or base.name + CALIBRATED_SUFFIX,
+        base=base,
+        peak_flops=peaks[0], hbm_bw=peaks[1], net_bw=peaks[2],
+        sources=sources, iterations=iterations,
+        fit_measurements=tuple(measurements),
+        validation_measurements=tuple(validation),
+        estimator=estimator,
+    )
+
+
+# --- CLI ----------------------------------------------------------------------
+
+
+def _configure_backend(backend: Optional[str], devices: int) -> None:
+    """Set backend env *before* jax is imported anywhere in this process."""
+    if "jax" in sys.modules:
+        return   # too late to steer; run with the backend already chosen
+    if backend and backend != "default":
+        os.environ.setdefault("JAX_PLATFORMS", backend)
+    # host-device forcing applies to any CPU-backed run, including
+    # backend='default' on a box where jax resolves to CPU anyway
+    if devices > 1 and backend != "tpu":
+        flag = f"--xla_force_host_platform_device_count={devices}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.measure.calibrate",
+        description="Measure this machine and fit achievable Ridgeline "
+                    "ceilings (PEAK/HBM/NET).")
+    ap.add_argument("--hardware", default="clx",
+                    help="datasheet preset to calibrate against "
+                         "(initialization + fallback for unmeasured "
+                         "resources)")
+    ap.add_argument("--backend", default="default",
+                    choices=("default", "cpu", "tpu"),
+                    help="jax platform (set before jax import)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="CPU host devices to fake for collective benches "
+                         "(>1 enables NET calibration accelerator-free)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + few repeats; finishes in <60s on CPU")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timing repeats per bench (default 3 smoke / 7 full)")
+    ap.add_argument("--estimator", default="best", choices=ESTIMATORS,
+                    help="wall-time statistic to fit on: 'best' sample "
+                         "(robust on shared boxes) or 'median'")
+    ap.add_argument("--no-steps", action="store_true",
+                    help="skip the whole-model-step validation benches")
+    ap.add_argument("--name", default=None,
+                    help="registry entry name (default <hardware>_cal)")
+    ap.add_argument("--out", default=None,
+                    help="registry directory (default artifacts/calibration)")
+    ap.add_argument("--figures", default=None,
+                    help="also write overlay figures to this directory")
+    args = ap.parse_args(argv)
+
+    try:
+        base = get_hardware(args.hardware)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    from repro.core.hardware import PRESETS
+    if args.name in PRESETS:
+        print(f"error: --name {args.name!r} shadows a datasheet preset; "
+              f"pick another (default: {args.hardware}_cal)", file=sys.stderr)
+        return 2
+    _configure_backend(args.backend, args.devices)
+
+    from repro.measure import microbench
+    suite = microbench.default_suite(
+        smoke=args.smoke, repeats=args.repeats, steps=not args.no_steps)
+    fit = [m for m in suite if m.category != "step"]
+    steps = [m for m in suite if m.category == "step"]
+    if not any(m.category == "network" for m in fit):
+        print("note: single device -> no collective benches; NET ceiling "
+              "stays datasheet (re-run with --devices N)", file=sys.stderr)
+
+    calib = fit_ceilings(fit, base, name=args.name, validation=steps,
+                         estimator=args.estimator)
+    path = calib.save(args.out)
+    print(calib.summary())
+    print(f"wrote {path}")
+
+    from repro.measure import overlay
+    cell_paths = overlay.write_measured_cells(calib, registry_dir=args.out)
+    for p in cell_paths:
+        print(f"wrote {p}")
+    if args.figures or not args.out:
+        figdir = args.figures or os.path.join(
+            os.path.dirname(calibration_dir(args.out)), "figures")
+        for p in overlay.write_calibration_figs(figdir, calib):
+            print(f"wrote {p}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,340 @@
+"""Sized microbenchmarks: real kernels under a clock, as (WorkUnit, seconds).
+
+Every bench in this module returns a :class:`Measurement` — the analytic
+Ridgeline characteristics (F, B_M, B_N) of what actually ran, paired with a
+robustly-measured wall time from :mod:`repro.measure.timers`.  The
+calibration fit (``measure/calibrate``) turns a suite of these into
+achievable PEAK/HBM/NET ceilings; the overlay (``measure/overlay``) plots
+them next to the analytic curves.
+
+Bench families and which resource they are built to saturate:
+
+  * ``matmul_benches`` — square GEMMs through the kernel dispatch layer
+    (``kernels/ops.matmul``: reference path on CPU, Pallas on TPU).
+    Compute-dominant at the larger sizes.
+  * ``memory_benches`` — elementwise streams (saxpy) over arrays far larger
+    than LLC.  Memory-dominant by construction: ~0.25 FLOP per byte.
+  * ``collective_benches`` — ``psum`` all-reduces over every local device
+    (needs >1 device: real chips, or CPU host devices via
+    ``--devices N`` on the calibrate CLI).  Network-dominant; wire bytes
+    priced by ``distributed/collectives`` under the ring model.
+  * ``step_benches`` — whole jitted model steps on tiny configs: the
+    dlrm-mlp train step (``train/loop``) and a reduced dense-LM decode step
+    (``serve/engine``), with F/B_M read off the compiled HLO via
+    ``core/hlo_analysis.cost_analysis_dict``.  These are *validation*
+    points: the calibrate CLI fits ceilings on the micro suites and reports
+    model-vs-measured error on the steps.
+
+All benches run accelerator-free on the CPU backend (shapes are sized so the
+smoke suite finishes in well under a minute).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.ridgeline import WorkUnit
+from repro.measure.timers import TimingStats, time_callable
+
+#: bench categories, also used by calibrate.py to split fit vs validation
+CATEGORIES = ("compute", "memory", "network", "step")
+
+#: sizes start where the resource saturates: sub-512 GEMMs and sub-LLC
+#: streams time dispatch overhead and cache, not the ceiling being fitted
+SMOKE_MATMUL_SIZES = (512, 768, 1024)
+FULL_MATMUL_SIZES = (512, 1024, 1536, 2048)
+SMOKE_STREAM_MB = (32, 64)
+FULL_STREAM_MB = (32, 64, 128, 256)
+SMOKE_COLLECTIVE_MB = (4, 16)
+FULL_COLLECTIVE_MB = (4, 16, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One (WorkUnit, measured seconds) pair plus provenance.
+
+    ``seconds`` is the median wall time (the typical operating point under
+    whatever contention the box has); ``best_seconds`` is the fastest sample
+    — the noise-robust estimator of what the hardware can do, which is what
+    ceiling *fitting* uses (``calibrate.fit_ceilings(estimator=...)``).
+    """
+
+    work: WorkUnit
+    seconds: float                   # median wall time of one execution
+    category: str                    # one of CATEGORIES
+    best_seconds: float = 0.0        # fastest sample; 0 -> falls back to median
+    rel_spread: float = 0.0          # IQR / median from the timing harness
+    backend: str = ""
+    meta: Tuple[Tuple[str, str], ...] = ()   # extra key/value provenance
+
+    def __post_init__(self):
+        if self.category not in CATEGORIES:
+            raise ValueError(
+                f"category {self.category!r} not in {CATEGORIES}")
+        if self.seconds <= 0:
+            raise ValueError(f"non-positive measurement for {self.work.name}")
+
+    @property
+    def best(self) -> float:
+        return self.best_seconds or self.seconds
+
+    def to_dict(self) -> Dict:
+        return {
+            "name": self.work.name,
+            "flops": self.work.flops,
+            "mem_bytes": self.work.mem_bytes,
+            "net_bytes": self.work.net_bytes,
+            "seconds": self.seconds,
+            "best_seconds": self.best,
+            "category": self.category,
+            "rel_spread": self.rel_spread,
+            "backend": self.backend,
+            "meta": dict(self.meta),
+        }
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Measurement":
+        return Measurement(
+            work=WorkUnit(d["name"], d["flops"], d["mem_bytes"],
+                          d["net_bytes"]),
+            seconds=d["seconds"], category=d["category"],
+            best_seconds=d.get("best_seconds", 0.0),
+            rel_spread=d.get("rel_spread", 0.0),
+            backend=d.get("backend", ""),
+            meta=tuple(sorted(d.get("meta", {}).items())))
+
+
+def _measure(name: str, fn, work: WorkUnit, category: str, *,
+             repeats: int, warmup: int = 2,
+             meta: Tuple[Tuple[str, str], ...] = ()) -> Measurement:
+    import jax
+    stats: TimingStats = time_callable(fn, repeats=repeats, warmup=warmup)
+    return Measurement(
+        work=work, seconds=stats.median, best_seconds=stats.best,
+        category=category, rel_spread=stats.rel_spread,
+        backend=jax.default_backend(), meta=meta)
+
+
+# --- compute: GEMMs through the kernel dispatch layer -------------------------
+
+
+def matmul_benches(sizes: Sequence[int] = SMOKE_MATMUL_SIZES, *,
+                   repeats: int = 5,
+                   via: Optional[str] = None) -> List[Measurement]:
+    """Square f32 GEMMs through the kernel layer (``kernels/ops`` + ``ref``).
+
+    ``via='ops'`` times the production dispatch wrapper — the Pallas blocked
+    kernel, compiled natively on TPU.  On CPU that wrapper runs Pallas in
+    interpret mode, whose per-block emulation overhead would be *measured
+    as* compute; so the default there is ``via='ref'``, the jitted reference
+    kernel (plain XLA dot — what this backend can actually do).
+
+    WorkUnit accounting is the compulsory-traffic model the planner uses:
+    F = 2·M·N·K MACs-as-flops, B_M = one read of each operand + one write of
+    the output.  B_N = 0 (single-device kernels).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    if via is None:
+        via = "ops" if jax.default_backend() == "tpu" else "ref"
+    if via not in ("ops", "ref"):
+        raise ValueError(f"via must be 'ops' or 'ref', got {via!r}")
+    matmul = ops.matmul if via == "ops" else jax.jit(ref.ref_matmul)
+    out = []
+    for s in sizes:
+        a = jax.random.normal(jax.random.PRNGKey(0), (s, s), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (s, s), jnp.float32)
+        itemsize = a.dtype.itemsize
+        work = WorkUnit(f"matmul_{s}x{s}x{s}",
+                        flops=2.0 * s * s * s,
+                        mem_bytes=3.0 * s * s * itemsize,
+                        net_bytes=0.0)
+        out.append(_measure(work.name, lambda a=a, b=b: matmul(a, b),
+                            work, "compute", repeats=repeats,
+                            meta=(("via", via),)))
+    return out
+
+
+# --- memory: elementwise streams ----------------------------------------------
+
+
+def memory_benches(sizes_mb: Sequence[int] = SMOKE_STREAM_MB, *,
+                   repeats: int = 5) -> List[Measurement]:
+    """saxpy streams ``y = 2x + y``: 2 FLOP and 12 bytes per element (f32).
+
+    Arrays are sized in MiB of *total traffic* well beyond cache, so the
+    measured rate is main-memory bandwidth, not LLC.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def saxpy(x, y):
+        return 2.0 * x + y
+
+    out = []
+    for mb in sizes_mb:
+        n = mb * 1024 * 1024 // 4          # f32 elements per operand
+        x = jnp.ones((n,), jnp.float32)
+        y = jnp.full((n,), 0.5, jnp.float32)
+        work = WorkUnit(f"saxpy_{mb}mb",
+                        flops=2.0 * n,
+                        mem_bytes=3.0 * n * 4,   # read x, read y, write out
+                        net_bytes=0.0)
+        out.append(_measure(work.name, lambda x=x, y=y: saxpy(x, y),
+                            work, "memory", repeats=repeats))
+    return out
+
+
+# --- network: all-reduce over the local device mesh ---------------------------
+
+
+def collective_benches(sizes_mb: Sequence[int] = SMOKE_COLLECTIVE_MB, *,
+                       repeats: int = 5) -> List[Measurement]:
+    """Ring-priced ``psum`` all-reduces across all local devices.
+
+    Returns ``[]`` on a single-device process — there is no wire to measure;
+    the calibrate CLI then keeps the datasheet NET ceiling and says so.
+    Payload is the per-chip logical tensor; wire bytes follow the
+    ``distributed/collectives`` ring model, so calibrated NET bandwidth is
+    directly comparable with the analytic planner's B_N accounting.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed import collectives
+
+    n_dev = jax.local_device_count()
+    if n_dev < 2:
+        return []
+    psum = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")
+    out = []
+    for mb in sizes_mb:
+        n = mb * 1024 * 1024 // 4
+        x = jnp.ones((n_dev, n), jnp.float32)
+        payload = float(n) * 4.0
+        wire = float(collectives.all_reduce_bytes(payload, n_dev, "ring"))
+        # per-chip reduction flops (~(n−1)/n adds per element) and the
+        # staging traffic of touching the payload twice
+        work = WorkUnit(f"allreduce_{mb}mb_x{n_dev}",
+                        flops=float(n),
+                        mem_bytes=2.0 * payload,
+                        net_bytes=wire)
+        out.append(_measure(work.name, lambda x=x: psum(x),
+                            work, "network", repeats=repeats))
+    return out
+
+
+# --- whole model steps (validation points) ------------------------------------
+
+
+def _hlo_work_unit(name: str, compiled, net_bytes: float = 0.0) -> WorkUnit:
+    from repro.core.hlo_analysis import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
+    return WorkUnit(name,
+                    flops=float(cost.get("flops", 0.0)),
+                    mem_bytes=float(cost.get("bytes accessed", 0.0)),
+                    net_bytes=net_bytes)
+
+
+def train_step_bench(batch: int = 64, width: int = 256, layers: int = 3, *,
+                     repeats: int = 3) -> Measurement:
+    """Tiny dlrm-mlp train step (loss+grad+SGD), F/B_M from compiled HLO."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.optim.optimizer import SGD
+    from repro.train.loop import (TrainStepConfig, build_train_step,
+                                  init_train_state)
+
+    cfg = get_config("dlrm-mlp").replace(
+        n_layers=layers, mlp_widths=(width,) * layers, d_model=width,
+        compute_dtype=jnp.float32)
+    opt = SGD(learning_rate=1e-2)
+    step = build_train_step(cfg, opt, TrainStepConfig())
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    batch_arrs = {
+        "features": jax.random.normal(jax.random.PRNGKey(1), (batch, width)),
+        "click": jnp.zeros((batch,), jnp.float32),
+    }
+    jitted = jax.jit(step)
+    compiled = jitted.lower(state, batch_arrs).compile()
+    work = _hlo_work_unit(f"train_step_mlp_b{batch}_w{width}x{layers}",
+                          compiled)
+    stats = time_callable(lambda: jitted(state, batch_arrs),
+                          repeats=repeats, warmup=2)
+    return Measurement(work=work, seconds=stats.median, category="step",
+                       rel_spread=stats.rel_spread,
+                       backend=jax.default_backend(),
+                       meta=(("kind", "train_step"), ("arch", "dlrm-mlp")))
+
+
+def serve_step_bench(batch: int = 8, max_len: int = 64, *,
+                     repeats: int = 3) -> Measurement:
+    """One-token decode on the reduced smollm config, F/B_M from HLO."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models import transformer as lm_mod
+    from repro.serve.engine import build_serve_step, init_cache
+
+    cfg = get_reduced("smollm-135m")
+    params = lm_mod.init_lm(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(params, cfg, batch, max_len)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    pos = jnp.int32(1)
+    jitted = jax.jit(build_serve_step(cfg))
+    compiled = jitted.lower(params, tok, cache, pos).compile()
+    work = _hlo_work_unit(f"serve_step_smollm_b{batch}", compiled)
+    stats = time_callable(lambda: jitted(params, tok, cache, pos),
+                          repeats=repeats, warmup=2)
+    return Measurement(work=work, seconds=stats.median, category="step",
+                       rel_spread=stats.rel_spread,
+                       backend=jax.default_backend(),
+                       meta=(("kind", "serve_step"), ("arch", "smollm-135m")))
+
+
+def step_benches(*, smoke: bool = True, repeats: int = 3) -> List[Measurement]:
+    if smoke:
+        return [train_step_bench(repeats=repeats),
+                serve_step_bench(repeats=repeats)]
+    return [train_step_bench(batch=256, width=512, layers=4, repeats=repeats),
+            serve_step_bench(batch=16, max_len=128, repeats=repeats)]
+
+
+# --- the suite ----------------------------------------------------------------
+
+
+def _global_warmup() -> None:
+    """One discarded kernel round to absorb runtime/threadpool cold start.
+
+    Per-bench warmup handles tracing+compilation; this handles the first
+    touch of the jax runtime itself, which otherwise lands entirely on
+    whichever bench happens to run first.
+    """
+    import jax
+    import jax.numpy as jnp
+    x = jnp.ones((1024, 1024), jnp.float32)
+    jax.block_until_ready(jax.jit(lambda a: a @ a)(x))
+
+
+def default_suite(*, smoke: bool = True, repeats: Optional[int] = None,
+                  steps: bool = True) -> List[Measurement]:
+    """The standard calibration suite: micro fits + step validation points."""
+    r = repeats if repeats is not None else (5 if smoke else 7)
+    _global_warmup()
+    out: List[Measurement] = []
+    out += matmul_benches(SMOKE_MATMUL_SIZES if smoke else FULL_MATMUL_SIZES,
+                          repeats=r)
+    out += memory_benches(SMOKE_STREAM_MB if smoke else FULL_STREAM_MB,
+                          repeats=r)
+    out += collective_benches(
+        SMOKE_COLLECTIVE_MB if smoke else FULL_COLLECTIVE_MB, repeats=r)
+    if steps:
+        out += step_benches(smoke=smoke, repeats=max(2, r - 1))
+    return out

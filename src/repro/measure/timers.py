@@ -1,0 +1,135 @@
+"""Robust wall-clock timing for jitted callables (and plain Python ones).
+
+The measurement discipline every microbenchmark in this subsystem shares:
+
+  * **dispatch-blind**: jax dispatch is async, so the raw return of a jitted
+    call measures almost nothing.  Every sample walks the output pytree and
+    calls ``block_until_ready`` on any leaf that has it (duck-typed — this
+    module never imports jax, so the statistics are unit-testable and the
+    harness times plain Python functions unchanged).
+  * **jit-discard**: the first ``warmup`` calls are timed but excluded from
+    the statistics; the first of them absorbs tracing + compilation.
+  * **median-of-k with IQR**: wall clocks on shared CPU boxes are noisy and
+    right-skewed (GC, scheduler).  We report the median as the estimate and
+    the inter-quartile range as the spread; mean/min/max ride along.
+
+``time_callable`` is the one entry point; ``robust_stats`` is the pure
+statistics core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence, Tuple
+
+
+def _leaves(out: Any):
+    """Minimal pytree walk (list/tuple/dict) — enough to reach jax arrays."""
+    if isinstance(out, (list, tuple)):
+        for x in out:
+            yield from _leaves(x)
+    elif isinstance(out, dict):
+        for x in out.values():
+            yield from _leaves(x)
+    else:
+        yield out
+
+
+def block_until_ready(out: Any) -> Any:
+    """Duck-typed ``jax.block_until_ready``: blocks every leaf that can."""
+    for leaf in _leaves(out):
+        blocker = getattr(leaf, "block_until_ready", None)
+        if callable(blocker):
+            blocker()
+    return out
+
+
+def _quantile(sorted_xs: Sequence[float], q: float) -> float:
+    """Linear-interpolation quantile of an ascending sequence (numpy's
+    default method), without requiring numpy."""
+    n = len(sorted_xs)
+    if n == 0:
+        raise ValueError("quantile of empty sample")
+    if n == 1:
+        return float(sorted_xs[0])
+    pos = q * (n - 1)
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    return float(sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Median-of-k summary of one timed callable."""
+
+    samples: Tuple[float, ...]       # kept samples, seconds, call order
+    warmup_samples: Tuple[float, ...]  # discarded jit/warmup calls
+    median: float
+    iqr: float                       # q75 − q25 of the kept samples
+    mean: float
+    best: float
+    worst: float
+
+    @property
+    def rel_spread(self) -> float:
+        """IQR as a fraction of the median — the noise figure of merit."""
+        return self.iqr / self.median if self.median > 0 else 0.0
+
+    @property
+    def seconds(self) -> float:
+        """The headline estimate (median)."""
+        return self.median
+
+    def summary(self) -> str:
+        return (f"{self.median * 1e3:.3f}ms ±{self.iqr * 1e3:.3f}ms IQR "
+                f"(n={len(self.samples)}, best {self.best * 1e3:.3f}ms)")
+
+
+def robust_stats(samples: Sequence[float],
+                 warmup: int = 0) -> TimingStats:
+    """Median/IQR statistics over ``samples``, discarding the first ``warmup``."""
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    kept = [float(s) for s in samples[warmup:]]
+    if not kept:
+        raise ValueError(
+            f"no samples left after discarding {warmup} warmup calls "
+            f"(got {len(samples)} total)")
+    srt = sorted(kept)
+    return TimingStats(
+        samples=tuple(kept),
+        warmup_samples=tuple(float(s) for s in samples[:warmup]),
+        median=_quantile(srt, 0.5),
+        iqr=_quantile(srt, 0.75) - _quantile(srt, 0.25),
+        mean=sum(kept) / len(kept),
+        best=srt[0],
+        worst=srt[-1],
+    )
+
+
+def time_callable(fn: Callable, *args,
+                  repeats: int = 7,
+                  warmup: int = 2,
+                  calls_per_sample: int = 1,
+                  clock: Callable[[], float] = time.perf_counter,
+                  **kwargs) -> TimingStats:
+    """Time ``fn(*args, **kwargs)`` with warmup discard and median-of-k.
+
+    Each of the ``warmup + repeats`` samples times ``calls_per_sample``
+    back-to-back calls (bump it for sub-microsecond callables so the clock
+    granularity stops dominating) and divides the elapsed wall time through.
+    Outputs are blocked on (``block_until_ready``) *inside* the timed region,
+    so async-dispatch runtimes are charged for the work, not the dispatch.
+    """
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    if calls_per_sample < 1:
+        raise ValueError(f"calls_per_sample must be >= 1, got {calls_per_sample}")
+    samples = []
+    for _ in range(warmup + repeats):
+        t0 = clock()
+        for _ in range(calls_per_sample):
+            block_until_ready(fn(*args, **kwargs))
+        samples.append((clock() - t0) / calls_per_sample)
+    return robust_stats(samples, warmup=warmup)

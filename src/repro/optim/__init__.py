@@ -1,0 +1,1 @@
+"""Optimizers (``optimizer``) and gradient compression (``compression``)."""

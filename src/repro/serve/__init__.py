@@ -1,0 +1,1 @@
+"""Serving layer: prefill + batched single-token decode (``engine``)."""

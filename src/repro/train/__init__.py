@@ -1,0 +1,1 @@
+"""Training layer: step construction (``loop``) + fault tolerance."""

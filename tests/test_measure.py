@@ -1,0 +1,392 @@
+"""Unit tests for the measurement & calibration subsystem (repro.measure).
+
+Everything here is accelerator-free and nearly jax-free: the timing
+statistics are pure Python, and the fitting tests run on *synthetic*
+measurements generated from known peaks, so they are exact.
+"""
+import json
+import math
+import os
+
+import pytest
+
+from repro.core.hardware import (CALIBRATION_SCHEMA, HardwareSpec,
+                                 get_hardware, list_hardware,
+                                 load_calibrated, spec_from_calibration)
+from repro.core.ridgeline import WorkUnit
+from repro.measure.calibrate import Calibration, fit_ceilings
+from repro.measure.microbench import Measurement
+from repro.measure.timers import (TimingStats, block_until_ready,
+                                  robust_stats, time_callable)
+
+# --- timers -------------------------------------------------------------------
+
+
+def test_robust_stats_median_iqr():
+    s = robust_stats([1.0, 2.0, 3.0, 4.0, 5.0])
+    assert s.median == 3.0
+    assert s.iqr == pytest.approx(2.0)     # q75=4, q25=2
+    assert s.mean == 3.0
+    assert s.best == 1.0 and s.worst == 5.0
+    assert s.rel_spread == pytest.approx(2.0 / 3.0)
+
+
+def test_robust_stats_discards_warmup():
+    # the 100.0 compile-time sample must not pollute the statistics
+    s = robust_stats([100.0, 1.0, 1.0, 1.0], warmup=1)
+    assert s.median == 1.0
+    assert s.warmup_samples == (100.0,)
+    assert len(s.samples) == 3
+
+
+def test_robust_stats_even_count_interpolates():
+    s = robust_stats([1.0, 2.0, 3.0, 4.0])
+    assert s.median == 2.5
+
+
+def test_robust_stats_empty_raises():
+    with pytest.raises(ValueError):
+        robust_stats([1.0], warmup=1)
+    with pytest.raises(ValueError):
+        robust_stats([])
+
+
+def test_time_callable_counts_calls_and_blocks():
+    calls = []
+
+    class Blocking:
+        def __init__(self):
+            self.blocked = False
+
+        def block_until_ready(self):
+            self.blocked = True
+
+    outs = []
+
+    def fn():
+        calls.append(1)
+        out = Blocking()
+        outs.append(out)
+        return {"a": [out]}        # nested pytree: blocker must be reached
+
+    stats = time_callable(fn, repeats=3, warmup=2)
+    assert isinstance(stats, TimingStats)
+    assert len(calls) == 5                      # warmup + repeats
+    assert len(stats.samples) == 3
+    assert all(o.blocked for o in outs)
+
+
+def test_time_callable_validates_args():
+    with pytest.raises(ValueError):
+        time_callable(lambda: None, repeats=0)
+    with pytest.raises(ValueError):
+        time_callable(lambda: None, calls_per_sample=0)
+
+
+def test_block_until_ready_passthrough():
+    assert block_until_ready(42) == 42
+    assert block_until_ready([1, (2, {"k": 3})]) == [1, (2, {"k": 3})]
+
+
+# --- synthetic calibration ----------------------------------------------------
+
+TRUE = HardwareSpec(name="true_box", peak_flops=1e11, hbm_bw=4e9, net_bw=2e8)
+#: a deliberately-wrong datasheet to initialize from
+BASE = HardwareSpec(name="fake_ds", peak_flops=5e12, hbm_bw=8e10, net_bw=9e9)
+
+
+def _synth(name, flops, mem, net, hw=TRUE, category="compute"):
+    t = max(flops / hw.peak_flops, mem / hw.hbm_bw, net / hw.net_bw)
+    return Measurement(work=WorkUnit(name, flops, mem, net), seconds=t,
+                       best_seconds=t, category=category)
+
+
+def synth_suite():
+    return [
+        _synth("gemm_small", 1e10, 1e7, 0.0),          # compute-bound
+        _synth("gemm_big", 8e10, 3e7, 0.0),
+        _synth("stream_small", 1e6, 4e8, 0.0, category="memory"),
+        _synth("stream_big", 4e6, 1.6e9, 0.0, category="memory"),
+        _synth("allreduce", 1e6, 1e7, 4e7, category="network"),
+        _synth("allreduce_big", 4e6, 4e7, 1.6e8, category="network"),
+    ]
+
+
+def test_fit_recovers_known_peaks_exactly():
+    calib = fit_ceilings(synth_suite(), BASE, name="true_box_cal")
+    assert calib.peak_flops == pytest.approx(TRUE.peak_flops, rel=1e-9)
+    assert calib.hbm_bw == pytest.approx(TRUE.hbm_bw, rel=1e-9)
+    assert calib.net_bw == pytest.approx(TRUE.net_bw, rel=1e-9)
+    assert calib.sources == {"peak_flops": "measured", "hbm_bw": "measured",
+                             "net_bw": "measured"}
+    errs = calib.error_summary("fit")
+    assert errs["n"] == 6
+    assert errs["max_abs_rel_error"] < 1e-9
+
+
+def test_fit_with_noise_stays_close():
+    noisy = []
+    for i, m in enumerate(synth_suite()):
+        factor = 1.0 + (0.05 if i % 2 else -0.05)
+        noisy.append(Measurement(work=m.work, seconds=m.seconds * factor,
+                                 best_seconds=m.seconds * factor,
+                                 category=m.category))
+    calib = fit_ceilings(noisy, BASE)
+    assert calib.peak_flops == pytest.approx(TRUE.peak_flops, rel=0.1)
+    assert calib.hbm_bw == pytest.approx(TRUE.hbm_bw, rel=0.1)
+    assert calib.net_bw == pytest.approx(TRUE.net_bw, rel=0.1)
+    assert calib.error_summary("fit")["max_abs_rel_error"] < 0.11
+
+
+def test_unmeasured_resource_keeps_datasheet():
+    # no network bench -> NET must stay at the datasheet number
+    suite = [m for m in synth_suite() if m.category != "network"]
+    calib = fit_ceilings(suite, BASE)
+    assert calib.net_bw == BASE.net_bw
+    assert calib.sources["net_bw"] == "datasheet"
+    assert calib.sources["peak_flops"] == "measured"
+
+
+def test_estimator_selects_statistic():
+    m = Measurement(work=WorkUnit("g", 1e10, 1e6, 0.0),
+                    seconds=2.0, best_seconds=1.0, category="compute")
+    best = fit_ceilings([m], BASE, estimator="best")
+    med = fit_ceilings([m], BASE, estimator="median")
+    assert best.peak_flops == pytest.approx(1e10)
+    assert med.peak_flops == pytest.approx(5e9)
+    with pytest.raises(ValueError):
+        fit_ceilings([m], BASE, estimator="mean")
+
+
+def test_fit_empty_raises():
+    with pytest.raises(ValueError):
+        fit_ceilings([], BASE)
+
+
+def test_validation_points_do_not_steer_fit():
+    step = _synth("step", 1e10, 1e9, 0.0, category="step")
+    wild = Measurement(work=step.work, seconds=step.seconds * 100,
+                       best_seconds=step.seconds * 100, category="step")
+    calib = fit_ceilings(synth_suite(), BASE, validation=[wild])
+    assert calib.peak_flops == pytest.approx(TRUE.peak_flops, rel=1e-9)
+    # ... but they do show up in the validation error summary
+    assert calib.error_summary("validation")["n"] == 1
+    assert calib.error_summary("validation")["max_abs_rel_error"] > 0.9
+
+
+# --- registry schema & round trip ---------------------------------------------
+
+
+def test_registry_roundtrip(tmp_path):
+    calib = fit_ceilings(synth_suite(), BASE, name="true_box_cal",
+                         validation=[_synth("step", 1e10, 1e9, 0.0,
+                                            category="step")])
+    path = calib.save(str(tmp_path))
+    assert os.path.basename(path) == "true_box_cal.json"
+
+    with open(path) as f:
+        d = json.load(f)
+    for key in ("schema", "name", "base", "estimator", "peak_flops",
+                "hbm_bw", "net_bw", "sources", "datasheet", "fit",
+                "validation", "measurements", "validation_measurements"):
+        assert key in d, key
+    assert d["schema"] == CALIBRATION_SCHEMA
+    assert d["base"] == "fake_ds"
+    assert len(d["measurements"]) == 6
+    for m in d["measurements"]:
+        for key in ("name", "flops", "mem_bytes", "net_bytes", "seconds",
+                    "assigned", "model_seconds", "rel_error"):
+            assert key in m, key
+
+    spec = spec_from_calibration(d)
+    assert spec == calib.spec()
+    assert spec.name == "true_box_cal"
+    assert spec.peak_flops == pytest.approx(TRUE.peak_flops, rel=1e-9)
+
+
+def test_registry_resolution_through_hardware(tmp_path):
+    calib = fit_ceilings(synth_suite(), BASE, name="true_box_cal")
+    calib.save(str(tmp_path))
+    reg = str(tmp_path)
+
+    # by exact name, by base name, and via get_hardware both ways
+    assert load_calibrated("true_box_cal", reg).hbm_bw == calib.hbm_bw
+    assert load_calibrated("fake_ds", reg).hbm_bw == calib.hbm_bw
+    assert get_hardware("true_box_cal", registry_dir=reg) == calib.spec()
+    assert get_hardware("fake_ds", calibrated=True,
+                        registry_dir=reg) == calib.spec()
+    # datasheet presets still win without calibrated=True
+    assert get_hardware("clx", registry_dir=reg).name == "clx"
+
+    listing = list_hardware(reg)
+    assert listing["true_box_cal"] == "calibrated"
+    assert listing["clx"] == "datasheet"
+
+    with pytest.raises(KeyError):
+        load_calibrated("never_measured", reg)
+    with pytest.raises(ValueError):
+        spec_from_calibration({"schema": "bogus", "name": "x"})
+
+
+def test_bad_schema_entries_do_not_list(tmp_path):
+    (tmp_path / "junk.json").write_text('{"name": "junk"}')
+    (tmp_path / "broken.json").write_text("{nope")
+    assert "junk" not in list_hardware(str(tmp_path))
+
+
+def test_corrupt_registry_entries_never_escape_keyerror(tmp_path):
+    # a corrupt file in the registry must not turn name-resolution errors
+    # into JSONDecodeError tracebacks
+    (tmp_path / "broken.json").write_text("{nope")
+    with pytest.raises(KeyError) as exc:
+        get_hardware("typo", registry_dir=str(tmp_path))
+    assert "unknown hardware spec" in exc.value.args[0]
+    # and a healthy entry next to it still resolves
+    fit_ceilings(synth_suite(), BASE, name="true_box_cal").save(str(tmp_path))
+    assert get_hardware("true_box_cal",
+                        registry_dir=str(tmp_path)).name == "true_box_cal"
+
+
+def test_missing_calibration_error_lists_only_calibrated(tmp_path):
+    fit_ceilings(synth_suite(), BASE, name="true_box_cal").save(str(tmp_path))
+    with pytest.raises(KeyError) as exc:
+        load_calibrated("tpu_v5e", str(tmp_path))
+    msg = exc.value.args[0]
+    assert "true_box_cal" in msg
+    assert "'tpu_v5e'" not in msg.split("no calibration for")[1].split(";")[1]
+
+
+def test_calibration_name_cannot_shadow_preset(tmp_path):
+    calib = fit_ceilings(synth_suite(), BASE, name="clx")
+    with pytest.raises(ValueError, match="shadows a datasheet preset"):
+        calib.save(str(tmp_path))
+    # an entry that somehow got written under a preset name never lists
+    good = fit_ceilings(synth_suite(), BASE, name="true_box_cal")
+    path = good.save(str(tmp_path))
+    d = json.load(open(path))
+    d["name"] = "clx"
+    (tmp_path / "shadow.json").write_text(json.dumps(d))
+    listing = list_hardware(str(tmp_path))
+    assert listing["clx"] == "datasheet"
+
+
+def test_calibrated_spec_scales_extra_links(tmp_path):
+    base = HardwareSpec(name="b", peak_flops=1e12, hbm_bw=1e11, net_bw=1e10,
+                        extra_links={"pod": 5e9})
+    m = Measurement(work=WorkUnit("ar", 0.0, 0.0, 1e8), seconds=0.1,
+                    best_seconds=0.1, category="network")
+    calib = fit_ceilings([m], base)
+    assert calib.net_bw == pytest.approx(1e9)
+    # slower links keep their ratio to the primary link
+    assert calib.spec().extra_links["pod"] == pytest.approx(5e8)
+
+
+# --- measurement serialization ------------------------------------------------
+
+
+def test_measurement_roundtrip_and_validation():
+    m = Measurement(work=WorkUnit("x", 1.0, 2.0, 3.0), seconds=0.5,
+                    best_seconds=0.4, category="memory", rel_spread=0.1,
+                    backend="cpu", meta=(("via", "ref"),))
+    assert Measurement.from_dict(m.to_dict()) == m
+    with pytest.raises(ValueError):
+        Measurement(work=WorkUnit("x", 1.0, 2.0, 3.0), seconds=0.5,
+                    category="warp")
+    with pytest.raises(ValueError):
+        Measurement(work=WorkUnit("x", 1.0, 2.0, 3.0), seconds=0.0,
+                    category="memory")
+    # best falls back to median when unset
+    m2 = Measurement(work=m.work, seconds=0.5, category="memory")
+    assert m2.best == 0.5
+
+
+# --- overlay ------------------------------------------------------------------
+
+
+def _calib():
+    return fit_ceilings(
+        synth_suite(), BASE, name="true_box_cal",
+        validation=[_synth("step_mlp", 1e10, 1e9, 0.0, category="step")])
+
+
+def test_attach_measurement_sets_cell_fields():
+    from repro.core.report import CellReport
+    from repro.measure.overlay import attach_measurement
+    rep = CellReport(
+        arch="a", shape="s", mesh="1", step_kind="train_step", num_devices=1,
+        hardware="clx", flops=1e9, mem_bytes=1e8, wire_bytes=0.0,
+        wire_bytes_by_kind={}, peak_memory_per_device=0.0, model_flops=1e9,
+        params_total=0.0, params_active=0.0, tokens_per_step=0.0)
+    rep.finalize(get_hardware("clx"))
+    attach_measurement(rep, rep.runtime * 2.0, source="test")
+    assert rep.measured_runtime == pytest.approx(rep.runtime * 2.0)
+    assert rep.measured_rel_error == pytest.approx(-0.5)
+    assert rep.measured_source == "test"
+
+
+def test_measured_cells_and_table():
+    from repro.measure.overlay import measured_cell_reports, measured_table
+    reports = measured_cell_reports(_calib())
+    assert len(reports) == 1
+    rep = reports[0]
+    assert rep.hardware == "true_box_cal"
+    assert rep.measured_runtime > 0
+    assert rep.measured_source.startswith("calibrate:true_box_cal")
+    # synthetic validation point is exact -> model error ~0
+    assert abs(rep.measured_rel_error) < 1e-9
+    table = measured_table(reports)
+    assert "step_mlp" in table and "rel err" in table
+
+
+def test_write_calibration_figs(tmp_path):
+    from repro.measure.overlay import write_calibration_figs
+    paths = write_calibration_figs(str(tmp_path), _calib())
+    assert len(paths) == 2
+    svg = open(paths[0]).read()
+    txt = open(paths[1]).read()
+    assert "measured" in svg and "meas " in svg     # hollow markers + notes
+    assert "meas " in txt and "vs model" in txt
+    assert "calibration true_box_cal" in txt        # summary block rides along
+
+
+def test_point_notes_format():
+    from repro.measure.overlay import point_notes
+    calib = _calib()
+    notes = point_notes(calib)
+    assert set(notes) == {m.work.name for m in
+                          calib.fit_measurements +
+                          calib.validation_measurements}
+    assert all("vs model" in v for v in notes.values())
+
+
+# --- CLI end-to-end (slow: really times kernels on CPU) -----------------------
+
+
+@pytest.mark.slow
+def test_calibrate_cli_smoke(tmp_path):
+    from repro.launch import plan as plan_mod
+    from repro.measure import calibrate as cal_mod
+
+    figs = tmp_path / "figs"
+    rc = cal_mod.main(["--backend", "cpu", "--smoke", "--repeats", "2",
+                       "--name", "clx_test_cal", "--hardware", "clx",
+                       "--out", str(tmp_path), "--figures", str(figs)])
+    assert rc == 0
+    entry = json.loads((tmp_path / "clx_test_cal.json").read_text())
+    assert entry["schema"] == CALIBRATION_SCHEMA
+    assert entry["sources"]["peak_flops"] == "measured"
+    # single device in-process -> no wire to measure
+    assert entry["sources"]["net_bw"] == "datasheet"
+    assert entry["validation"]["n"] == 2
+    cells = sorted(os.listdir(tmp_path / "cells"))
+    assert any("train_step" in c for c in cells)
+    assert any(f.startswith("calibration_clx_test_cal")
+               for f in os.listdir(figs))
+
+    # the calibrated spec must round-trip into planner rankings
+    spec = get_hardware("clx", calibrated=True, registry_dir=str(tmp_path))
+    assert spec.name == "clx_test_cal"
+    from repro.configs import get_config
+    plans = plan_mod.plan(get_config("dlrm-mlp"), spec, 4, batch=512)
+    assert plans and math.isfinite(plans[0].runtime)
+    assert plans[0].runtime > 0

@@ -1,0 +1,93 @@
+"""CellReport JSON round-trip + persistence guarantees (core/report)."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.hardware import get_hardware
+from repro.core.report import CellReport, load_reports, roofline_table
+
+
+def _report(**overrides) -> CellReport:
+    kw = dict(
+        arch="dlrm-mlp", shape="train_4k", mesh="16x16",
+        step_kind="train_step", num_devices=256, hardware="clx",
+        flops=1.2e12, mem_bytes=3.4e9, wire_bytes=5.6e8,
+        wire_bytes_by_kind={"all-reduce": 5.6e8},
+        peak_memory_per_device=2.0 * 2**30,
+        model_flops=3.0e14, params_total=1.3e8, params_active=1.3e8,
+        tokens_per_step=2.1e6, notes="round-trip fixture")
+    kw.update(overrides)
+    return CellReport(**kw).finalize(get_hardware("clx"))
+
+
+def test_json_roundtrip_equal():
+    rep = _report()
+    back = CellReport.from_json(rep.to_json())
+    assert back == rep
+
+
+def test_roundtrip_preserves_measured_overlay():
+    rep = _report()
+    rep.measured_runtime = 0.123
+    rep.measured_rel_error = -0.07
+    rep.measured_source = "calibrate:clx_cal@cpu"
+    back = CellReport.from_json(rep.to_json())
+    assert back.measured_runtime == 0.123
+    assert back.measured_rel_error == -0.07
+    assert back.measured_source == "calibrate:clx_cal@cpu"
+    assert back == rep
+
+
+def test_from_json_ignores_unknown_fields():
+    d = json.loads(_report().to_json())
+    d["field_from_the_future"] = 1
+    rep = CellReport.from_json(json.dumps(d))
+    assert rep.arch == "dlrm-mlp"
+
+
+def test_measured_fields_default_empty():
+    rep = _report()
+    assert rep.measured_runtime == 0.0
+    assert rep.measured_rel_error == 0.0
+    assert rep.measured_source == ""
+    # and they serialize (schema carries them even before a clock ran)
+    d = json.loads(rep.to_json())
+    assert d["measured_runtime"] == 0.0
+    assert d["measured_source"] == ""
+
+
+def test_save_load_directory_roundtrip(tmp_path):
+    reports = [_report(), _report(shape="decode_32k", variant="tree"),
+               _report(mesh="2x16x16")]
+    for r in reports:
+        r.save(str(tmp_path))
+    loaded = load_reports(str(tmp_path))
+    assert len(loaded) == 3
+    assert sorted(r.shape for r in loaded) == \
+        sorted(r.shape for r in reports)
+    by_key = {(r.shape, r.mesh, r.variant): r for r in loaded}
+    for r in reports:
+        assert by_key[(r.shape, r.mesh, r.variant)] == r
+
+
+def test_load_reports_missing_dir_is_empty(tmp_path):
+    assert load_reports(str(tmp_path / "nope")) == []
+
+
+def test_finalize_derives_consistent_times():
+    rep = _report()
+    hw = get_hardware("clx")
+    assert rep.t_compute == pytest.approx(rep.flops / hw.peak_flops)
+    assert rep.t_memory == pytest.approx(rep.mem_bytes / hw.hbm_bw)
+    assert rep.t_network == pytest.approx(rep.wire_bytes / hw.net_bw)
+    assert rep.runtime == pytest.approx(
+        max(rep.t_compute, rep.t_memory, rep.t_network))
+    assert rep.bottleneck in ("compute", "memory", "network")
+    # and the markdown emitter accepts the round-tripped object
+    assert rep.arch in roofline_table([CellReport.from_json(rep.to_json())])
+
+
+def test_all_fields_json_serializable():
+    d = dataclasses.asdict(_report())
+    json.dumps(d)          # no exotic types anywhere in the schema
