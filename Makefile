@@ -4,13 +4,16 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench ci plan-demo calibrate-smoke
+.PHONY: test test-fast test-slow bench ci plan-demo calibrate-smoke
 
 test:            ## tier-1 gate: full suite, stop on first failure
 	$(PY) -m pytest -x -q
 
-test-fast:       ## skip the slow end-to-end tests
+test-fast:       ## quick signal (<60s): skip the slow end-to-end tests
 	$(PY) -m pytest -x -q -m "not slow"
+
+test-slow:       ## the slow tier only (marked end-to-end tests)
+	$(PY) -m pytest -x -q -m "slow"
 
 bench:           ## paper-claim checks; nonzero exit on mismatch
 	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 gate + calibration smoke + paper-claim checks — what `make ci` runs.
-#   tests:      PYTHONPATH via pytest.ini (pythonpath = src .)
+#   tests:      PYTHONPATH via pytest.ini (pythonpath = src .); the fast
+#               tier (-m "not slow", <60s) runs first for quick signal,
+#               then the slow end-to-end tier
 #   calibrate:  tiny-shape CPU measurement pass (<60s); refreshes
 #               artifacts/calibration so the bench below reports its errors
 #   bench:      benchmarks/run.py exits nonzero on any paper-claim mismatch
@@ -8,7 +10,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-python -m pytest -x -q "$@"
+if printf '%s\n' "$@" | grep -q -- '^-m'; then
+    # the caller picked their own marker expression: a second -m would
+    # silently override the tier split, so run a single invocation
+    python -m pytest -x -q "$@"
+else
+    # exit code 5 = "no tests collected": fine for either tier when the
+    # caller's args (a file, -k pattern) select tests only in the other one
+    python -m pytest -x -q -m "not slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
+    python -m pytest -x -q -m "slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.measure.calibrate --backend cpu --smoke --devices 4
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run

@@ -1,10 +1,14 @@
 """Hardware resource book for Ridgeline analysis.
 
-A ``HardwareSpec`` carries exactly the three bandwidth-like quantities the
-Ridgeline model (paper §II) needs: peak compute throughput, memory bandwidth,
-and network bandwidth — all *per compute entity* (chip / socket).  Multi-level
-networks (ICI within a pod, DCI between pods) are expressed as a dict of named
-network links so the multi-pod analysis can take per-axis terms.
+A ``HardwareSpec`` carries the three bandwidth-like quantities the Ridgeline
+model (paper §II) needs — peak compute throughput, memory bandwidth, and
+network bandwidth, all *per compute entity* (chip / socket) — plus the α
+(latency) terms of the α–β extension: a fixed per-execution overhead for
+compute and memory, and a per-hop latency for the network, so collective
+time is ``α·steps + bytes/bandwidth`` (Chan et al.) instead of
+bandwidth-only.  Multi-level networks (ICI within a pod, DCI between pods)
+are expressed as a dict of named network links so the multi-pod analysis can
+take per-axis terms; each named link can carry its own α.
 
 Specs come from two sources:
 
@@ -41,6 +45,16 @@ class HardwareSpec:
         single link so the division is consistent).
       extra_links: optional named slower links (e.g. ``{"dci": 25e9}``) for
         multi-level network analysis; keys are mesh-axis tags.
+      alpha_compute: fixed launch/dispatch overhead per work-unit execution,
+        seconds (the α in ``t_C = α + F/PEAK``); 0 for pure-bandwidth specs.
+      alpha_memory: fixed per-execution memory-system overhead, seconds.
+      alpha_network: per-hop network latency, seconds per serialized
+        collective step (the α in ``t_N = α·steps + B_N/bw``).
+      link_alphas: optional per-link α overrides keyed like ``extra_links``;
+        a link without an entry inherits ``alpha_network``.
+      model_rel_error: median |relative error| of this spec's calibration on
+        whole-step validation points (0 for datasheet presets); consumers
+        like the planner widen point estimates into uncertainty bands by it.
       vmem_bytes: fast scratchpad capacity per core (VMEM for TPU), used by
         kernel block-shape planning, not by the Ridgeline itself.
     """
@@ -50,6 +64,11 @@ class HardwareSpec:
     hbm_bw: float
     net_bw: float
     extra_links: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    alpha_compute: float = 0.0
+    alpha_memory: float = 0.0
+    alpha_network: float = 0.0
+    link_alphas: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    model_rel_error: float = 0.0
     vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB (v5e VMEM per core)
 
     # ---- machine balance points (paper §II, Fig. 2) -------------------------
@@ -72,10 +91,27 @@ class HardwareSpec:
         """
         return self.peak_flops / self.net_bw
 
+    #: names that always resolve to the primary link
+    PRIMARY_LINKS = (None, "ici", "net")
+
     def bandwidth_for(self, link: str | None = None) -> float:
-        if link is None or link == "ici" or link == "net":
+        """Bandwidth of a named link; unknown names raise with the options."""
+        if link in self.PRIMARY_LINKS:
             return self.net_bw
-        return float(self.extra_links[link])
+        try:
+            return float(self.extra_links[link])
+        except KeyError:
+            raise KeyError(
+                f"hardware spec {self.name!r} has no network link {link!r}; "
+                f"available links: primary ('net'/'ici'/None at "
+                f"{self.net_bw:.3g} B/s) plus extra_links "
+                f"{sorted(self.extra_links) or '{}'}") from None
+
+    def alpha_for(self, link: str | None = None) -> float:
+        """Per-hop α of a named link (falls back to ``alpha_network``)."""
+        if link not in self.PRIMARY_LINKS and link not in self.extra_links:
+            self.bandwidth_for(link)           # raise the actionable KeyError
+        return float(self.link_alphas.get(link, self.alpha_network))
 
 
 # --- Presets -----------------------------------------------------------------
@@ -106,8 +142,13 @@ PRESETS: Dict[str, HardwareSpec] = {"tpu_v5e": TPU_V5E, "clx": CLX}
 
 # --- calibration registry -----------------------------------------------------
 
-#: JSON schema tag written/required by the calibration registry
-CALIBRATION_SCHEMA = "repro.calibration/v1"
+#: JSON schema tag the calibration registry *writes* (v2: α–β fit with
+#: per-resource α terms and independently-fitted per-link bandwidths)
+CALIBRATION_SCHEMA = "repro.calibration/v2"
+
+#: schema tags the registry *reads*; v1 entries (bandwidth-only fit, extra
+#: links scaled by the primary-NET ratio) load with all α = 0
+CALIBRATION_SCHEMAS = ("repro.calibration/v1", CALIBRATION_SCHEMA)
 
 #: suffix convention: the calibrated twin of preset ``clx`` is ``clx_cal``
 CALIBRATED_SUFFIX = "_cal"
@@ -130,12 +171,18 @@ def calibration_dir(registry_dir: Optional[str] = None) -> str:
 
 
 def spec_from_calibration(d: Mapping) -> HardwareSpec:
-    """Build a HardwareSpec from one calibration-registry JSON dict."""
+    """Build a HardwareSpec from one calibration-registry JSON dict.
+
+    Accepts any schema in :data:`CALIBRATION_SCHEMAS`; v1 entries predate
+    the α–β fit, so their α terms default to 0 (bandwidth-only behaviour is
+    preserved bit-for-bit).
+    """
     schema = d.get("schema")
-    if schema != CALIBRATION_SCHEMA:
+    if schema not in CALIBRATION_SCHEMAS:
         raise ValueError(
             f"calibration entry {d.get('name')!r} has schema {schema!r}, "
-            f"expected {CALIBRATION_SCHEMA!r}")
+            f"expected one of {CALIBRATION_SCHEMAS}")
+    validation = d.get("validation", {}) or {}
     return HardwareSpec(
         name=str(d["name"]),
         peak_flops=float(d["peak_flops"]),
@@ -143,6 +190,12 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
         net_bw=float(d["net_bw"]),
         extra_links={k: float(v)
                      for k, v in dict(d.get("extra_links", {})).items()},
+        alpha_compute=float(d.get("alpha_compute", 0.0)),
+        alpha_memory=float(d.get("alpha_memory", 0.0)),
+        alpha_network=float(d.get("alpha_network", 0.0)),
+        link_alphas={k: float(v)
+                     for k, v in dict(d.get("link_alphas", {})).items()},
+        model_rel_error=float(validation.get("median_abs_rel_error", 0.0)),
         vmem_bytes=int(d.get("vmem_bytes", HardwareSpec.vmem_bytes)),
     )
 
@@ -154,7 +207,7 @@ def _read_calibration_entry(path: str) -> Optional[Dict]:
             d = json.load(f)
     except (OSError, ValueError):
         return None
-    if not isinstance(d, dict) or d.get("schema") != CALIBRATION_SCHEMA:
+    if not isinstance(d, dict) or d.get("schema") not in CALIBRATION_SCHEMAS:
         return None
     return d
 

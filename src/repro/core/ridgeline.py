@@ -23,6 +23,21 @@ with x* = HBM/NET, y* = PEAK/HBM, k* = PEAK/NET.  The classification is
 (see ``tests/test_ridgeline.py`` for the hypothesis property test), and the
 projected runtime at the bound is ``max(t_C, t_M, t_N)`` (paper §III: divide
 the dominant traffic by its bandwidth).
+
+**α–β extension.**  Real collectives pay a per-hop latency on top of the
+bandwidth term (Chan et al.), and real kernels pay a dispatch overhead, so
+the resource times here are
+
+    t_C = α_C + F / PEAK          (α_C only when F > 0)
+    t_M = α_M + B_M / HBM         (α_M only when B_M > 0)
+    t_N = α_N · steps + B_N / NET
+
+with the α's coming from :class:`~repro.core.hardware.HardwareSpec` and
+``steps`` (serialized network hops) from :class:`WorkUnit.net_steps`.  Every
+datasheet preset has α = 0, which recovers the paper's bandwidth-only model
+exactly — including the quadrant/argmax equivalence theorem, which holds in
+that regime.  With nonzero α the *classification* is the argmax of the
+α-aware times (the physical definition); the plane placement is unchanged.
 """
 from __future__ import annotations
 
@@ -54,9 +69,12 @@ class WorkUnit:
     flops: float          # F
     mem_bytes: float      # B_M
     net_bytes: float      # B_N  (wire bytes per chip; 0 for single-chip work)
+    net_steps: float = 0.0  # serialized network hops (the α multiplier);
+    #                         0 keeps the bandwidth-only network time
 
     def __post_init__(self):
-        if self.flops < 0 or self.mem_bytes < 0 or self.net_bytes < 0:
+        if self.flops < 0 or self.mem_bytes < 0 or self.net_bytes < 0 \
+                or self.net_steps < 0:
             raise ValueError(f"negative resource count in {self}")
 
     # ---- intensities (paper Table I) ----------------------------------------
@@ -141,13 +159,36 @@ def classify_by_quadrant(work: WorkUnit, hw: HardwareSpec) -> Resource:
     return Resource.COMPUTE if xy >= hw.ridge_network else Resource.NETWORK
 
 
+def resource_times(work: WorkUnit, hw: HardwareSpec,
+                   link: Optional[str] = None
+                   ) -> Tuple[float, float, float]:
+    """The α-aware (t_C, t_M, t_N); α's of 0 give the paper's pure-β times.
+
+    This is the single scalar definition of the time model — the
+    calibration fit prices its measurements through it, and the vectorized
+    twin in ``core/sweep`` is property-tested against it.  ``link`` names
+    the network link the wire bytes rode (None = primary): its bandwidth
+    and per-hop α come from ``hw.bandwidth_for``/``hw.alpha_for``.
+    """
+    t_c = (hw.alpha_compute if work.flops > 0 else 0.0) + \
+        _safe_div(work.flops, hw.peak_flops)
+    t_m = (hw.alpha_memory if work.mem_bytes > 0 else 0.0) + \
+        _safe_div(work.mem_bytes, hw.hbm_bw)
+    t_n = hw.alpha_for(link) * work.net_steps + \
+        _safe_div(work.net_bytes, hw.bandwidth_for(link))
+    return t_c, t_m, t_n
+
+
 def classify_by_times(work: WorkUnit, hw: HardwareSpec) -> Resource:
-    """Bottleneck as argmax of resource times (the physical definition)."""
-    times = {
-        Resource.COMPUTE: _safe_div(work.flops, hw.peak_flops),
-        Resource.MEMORY: _safe_div(work.mem_bytes, hw.hbm_bw),
-        Resource.NETWORK: _safe_div(work.net_bytes, hw.net_bw),
-    }
+    """Bottleneck as argmax of the α-aware times (the physical definition).
+
+    Equals :func:`classify_by_quadrant` whenever the spec's α terms are zero
+    (the checked theorem); with α > 0 this is the ground truth and the
+    quadrant construction remains the bandwidth-only plane picture.
+    """
+    t_c, t_m, t_n = resource_times(work, hw)
+    times = {Resource.COMPUTE: t_c, Resource.MEMORY: t_m,
+             Resource.NETWORK: t_n}
     # tie-break in the same COMPUTE > MEMORY > NETWORK priority order
     order = [Resource.COMPUTE, Resource.MEMORY, Resource.NETWORK]
     best = max(order, key=lambda r: (times[r], -order.index(r)))
@@ -155,9 +196,7 @@ def classify_by_times(work: WorkUnit, hw: HardwareSpec) -> Resource:
 
 
 def analyze(work: WorkUnit, hw: HardwareSpec) -> RidgelineAnalysis:
-    t_c = _safe_div(work.flops, hw.peak_flops)
-    t_m = _safe_div(work.mem_bytes, hw.hbm_bw)
-    t_n = _safe_div(work.net_bytes, hw.net_bw)
+    t_c, t_m, t_n = resource_times(work, hw)
     runtime = max(t_c, t_m, t_n)
     attained = _safe_div(work.flops, runtime) if runtime > 0 else 0.0
     return RidgelineAnalysis(
@@ -166,7 +205,7 @@ def analyze(work: WorkUnit, hw: HardwareSpec) -> RidgelineAnalysis:
         t_compute=t_c,
         t_memory=t_m,
         t_network=t_n,
-        bottleneck=classify_by_quadrant(work, hw),
+        bottleneck=classify_by_times(work, hw),
         runtime=runtime,
         attained_flops=attained,
         peak_fraction=_safe_div(attained, hw.peak_flops),
@@ -180,11 +219,13 @@ def analyze_multilink(
 ) -> RidgelineAnalysis:
     """Beyond-paper: Ridgeline with a multi-level network.
 
-    ``work_per_link`` maps link tag -> WorkUnit whose ``net_bytes`` are the
-    wire bytes on that link (flops/mem_bytes identical across entries).  The
-    effective network time is the max over links; we fold it back into a
-    single equivalent WorkUnit by scaling B_N to primary-link units so the 2D
-    plane still applies (the plane is defined up to the choice of network).
+    ``work_per_link`` maps link tag -> WorkUnit whose ``net_bytes`` (and
+    ``net_steps``) are the wire traffic on that link (flops/mem_bytes
+    identical across entries).  Each link's time is α–β priced with *its
+    own* bandwidth and per-hop α; the effective network time is the max over
+    links, folded back into a single equivalent WorkUnit by scaling B_N to
+    primary-link units so the 2D plane still applies (the plane is defined
+    up to the choice of network).
     """
     if not work_per_link:
         raise ValueError("need at least one link")
@@ -193,8 +234,10 @@ def analyze_multilink(
     t_net = 0.0
     for tag, w in items:
         bw = hw.bandwidth_for(tag)
-        t_net = max(t_net, _safe_div(w.net_bytes, bw))
+        t_link = hw.alpha_for(tag) * w.net_steps + _safe_div(w.net_bytes, bw)
+        t_net = max(t_net, t_link)
     eff_net_bytes = t_net * hw.net_bw  # primary-link-equivalent bytes
+    # steps fold into the equivalent bytes, so the folded unit carries none
     eff = WorkUnit(base.name, base.flops, base.mem_bytes, eff_net_bytes)
     return analyze(eff, hw)
 

@@ -87,14 +87,23 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
           hw: Optional[HardwareLike] = None, *,
           peak_flops: Optional[ArrayLike] = None,
           hbm_bw: Optional[ArrayLike] = None,
-          net_bw: Optional[ArrayLike] = None) -> SweepResult:
-    """Evaluate the Ridgeline on a broadcast grid of work units.
+          net_bw: Optional[ArrayLike] = None,
+          net_steps: ArrayLike = 0.0,
+          alpha_compute: Optional[ArrayLike] = None,
+          alpha_memory: Optional[ArrayLike] = None,
+          alpha_network: Optional[ArrayLike] = None) -> SweepResult:
+    """Evaluate the (α-aware) Ridgeline on a broadcast grid of work units.
 
     Machine peaks come either from ``hw`` (one spec for the whole grid; a
     string resolves through ``core.hardware.get_hardware``, so calibrated
     registry names work anywhere a spec does) or from explicit
     ``peak_flops``/``hbm_bw``/``net_bw`` arrays, which also broadcast —
-    sweeping *hardware* is just another grid axis.
+    sweeping *hardware* is just another grid axis.  α terms and ``net_steps``
+    (serialized network hops) broadcast the same way and default from ``hw``
+    (0 without one), reproducing the bandwidth-only model when all zero:
+
+        t_C = α_C·[F>0] + F/peak   t_M = α_M·[B_M>0] + B_M/hbm
+        t_N = α_N·steps + B_N/net
     """
     if isinstance(hw, str):
         hw = get_hardware(hw)
@@ -102,15 +111,25 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
         peak_flops = hw.peak_flops if peak_flops is None else peak_flops
         hbm_bw = hw.hbm_bw if hbm_bw is None else hbm_bw
         net_bw = hw.net_bw if net_bw is None else net_bw
+        alpha_compute = hw.alpha_compute if alpha_compute is None \
+            else alpha_compute
+        alpha_memory = hw.alpha_memory if alpha_memory is None \
+            else alpha_memory
+        alpha_network = hw.alpha_network if alpha_network is None \
+            else alpha_network
     if peak_flops is None or hbm_bw is None or net_bw is None:
         raise ValueError("pass hw= or all three of peak_flops/hbm_bw/net_bw")
+    alpha_compute = 0.0 if alpha_compute is None else alpha_compute
+    alpha_memory = 0.0 if alpha_memory is None else alpha_memory
+    alpha_network = 0.0 if alpha_network is None else alpha_network
 
-    f, bm, bn, pk, mb, nb = np.broadcast_arrays(
+    f, bm, bn, pk, mb, nb, ns, a_c, a_m, a_n = np.broadcast_arrays(
         *(np.asarray(v, dtype=np.float64)
-          for v in (flops, mem_bytes, net_bytes, peak_flops, hbm_bw, net_bw)))
-    t_c = _safe_div(f, pk)
-    t_m = _safe_div(bm, mb)
-    t_n = _safe_div(bn, nb)
+          for v in (flops, mem_bytes, net_bytes, peak_flops, hbm_bw, net_bw,
+                    net_steps, alpha_compute, alpha_memory, alpha_network)))
+    t_c = np.where(f > 0, a_c, 0.0) + _safe_div(f, pk)
+    t_m = np.where(bm > 0, a_m, 0.0) + _safe_div(bm, mb)
+    t_n = a_n * ns + _safe_div(bn, nb)
     times = np.stack([t_c, t_m, t_n])       # axis 0 == RESOURCE_ORDER
     runtime = times.max(axis=0)
     # np.argmax returns the first maximal index -> the priority tie-break
@@ -147,6 +166,10 @@ def crossover(xs: ArrayLike, t_a: ArrayLike, t_b: ArrayLike,
     (in log-x when ``log_x``); exact when the difference is linear in x —
     e.g. constant network time vs batch-linear compute time (Fig. 4c).
     Returns None when the curves never cross on the sampled range.
+
+    With ``log_x`` a bracket touching a nonpositive sample (where log is
+    undefined) falls back to linear interpolation for that bracket instead
+    of raising — sampled grids that start at 0 are common in sweeps.
     """
     xs = np.asarray(xs, dtype=np.float64)
     d = np.asarray(t_a, dtype=np.float64) - np.asarray(t_b, dtype=np.float64)
@@ -156,11 +179,12 @@ def crossover(xs: ArrayLike, t_a: ArrayLike, t_b: ArrayLike,
         exact = np.nonzero(sign == 0)[0]
         return float(xs[exact[0]]) if exact.size else None
     i = int(idx[0])
-    x0, x1 = (math.log(xs[i]), math.log(xs[i + 1])) if log_x else \
+    use_log = log_x and xs[i] > 0 and xs[i + 1] > 0
+    x0, x1 = (math.log(xs[i]), math.log(xs[i + 1])) if use_log else \
         (xs[i], xs[i + 1])
     frac = d[i] / (d[i] - d[i + 1])
     xc = x0 + frac * (x1 - x0)
-    return float(math.exp(xc)) if log_x else float(xc)
+    return float(math.exp(xc)) if use_log else float(xc)
 
 
 def transitions(result: SweepResult, xs: Optional[ArrayLike] = None

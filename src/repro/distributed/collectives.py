@@ -31,8 +31,14 @@ Per-chip wire bytes:
   all-gather     ring    (n−1)/n · payload
   all-to-all     ring    (n−1)/n · payload
 
-Latency ``steps`` (serialized hops, the α term) are reported alongside for
-completeness; the Ridgeline itself is bandwidth-only.
+Latency ``steps`` are the serialized hop counts of each algorithm; together
+with a per-hop latency α they give the α–β collective time
+
+    t = α · steps + wire_bytes / link_bw
+
+(:meth:`CollectiveCost.time`), which is what the α-aware Ridgeline
+(``core/ridgeline``, ``core/sweep``) and the planner charge for network
+work.  With α = 0 this degenerates to the paper's bandwidth-only model.
 """
 from __future__ import annotations
 
@@ -54,9 +60,23 @@ class CollectiveCost:
     wire_bytes: ArrayLike
     steps: ArrayLike
 
-    def time(self, link_bw: float) -> ArrayLike:
-        """Bandwidth-term time at ``link_bw`` bytes/s (α ignored)."""
-        return np.asarray(self.wire_bytes) / link_bw
+    def time(self, link_bw: float, alpha: float = 0.0) -> ArrayLike:
+        """α–β time: ``alpha·steps + wire_bytes/link_bw`` (α defaults to 0,
+        the bandwidth-only model)."""
+        return (np.asarray(alpha, dtype=np.float64) * np.asarray(self.steps)
+                + np.asarray(self.wire_bytes) / link_bw)
+
+    def __add__(self, other: "CollectiveCost") -> "CollectiveCost":
+        """Serial composition: bytes and hops both accumulate."""
+        return CollectiveCost(
+            np.asarray(self.wire_bytes) + np.asarray(other.wire_bytes),
+            np.asarray(self.steps) + np.asarray(other.steps))
+
+    def scaled(self, k: ArrayLike) -> "CollectiveCost":
+        """``k`` back-to-back executions of this collective."""
+        k = np.asarray(k, dtype=np.float64)
+        return CollectiveCost(k * np.asarray(self.wire_bytes),
+                              k * np.asarray(self.steps))
 
 
 def _ring_factor(n: ArrayLike) -> np.ndarray:
@@ -121,26 +141,39 @@ def all_reduce_bytes(payload_bytes: ArrayLike, group_size: ArrayLike,
     return all_reduce(payload_bytes, group_size, algorithm).wire_bytes
 
 
-# --- strategy-level accounting (what feeds WorkUnit.net_bytes) ----------------
+# --- strategy-level accounting (what feeds WorkUnit.net_bytes/net_steps) ------
+
+
+def dp_grad_sync(grad_bytes_per_chip: ArrayLike, dp: ArrayLike,
+                 algorithm: str = "ring") -> CollectiveCost:
+    """Data parallel: one all-reduce of the local gradient shard per step."""
+    return all_reduce(grad_bytes_per_chip, dp, algorithm)
 
 
 def dp_grad_sync_bytes(grad_bytes_per_chip: ArrayLike, dp: ArrayLike,
                        algorithm: str = "ring") -> ArrayLike:
-    """Data parallel: one all-reduce of the local gradient shard per step."""
-    return all_reduce_bytes(grad_bytes_per_chip, dp, algorithm)
+    return dp_grad_sync(grad_bytes_per_chip, dp, algorithm).wire_bytes
+
+
+def tp_act_sync(act_bytes: ArrayLike, tp: ArrayLike,
+                syncs_per_layer: ArrayLike, n_layers: ArrayLike,
+                algorithm: str = "ring") -> CollectiveCost:
+    """Tensor parallel: activation all-reduces at block boundaries.
+
+    Megatron-style transformers sync 4×/layer (f+g, fwd+bwd over attn and
+    mlp blocks); a plain MLP tower syncs 2×/layer (fwd + bwd).  The syncs
+    are serialized by data dependence, so hops accumulate too.
+    """
+    per = all_reduce(act_bytes, tp, algorithm)
+    return per.scaled(np.asarray(syncs_per_layer, np.float64)
+                      * np.asarray(n_layers, np.float64))
 
 
 def tp_act_sync_bytes(act_bytes: ArrayLike, tp: ArrayLike,
                       syncs_per_layer: ArrayLike, n_layers: ArrayLike,
                       algorithm: str = "ring") -> ArrayLike:
-    """Tensor parallel: activation all-reduces at block boundaries.
-
-    Megatron-style transformers sync 4×/layer (f+g, fwd+bwd over attn and
-    mlp blocks); a plain MLP tower syncs 2×/layer (fwd + bwd).
-    """
-    per = all_reduce_bytes(act_bytes, tp, algorithm)
-    return np.asarray(syncs_per_layer, np.float64) * \
-        np.asarray(n_layers, np.float64) * per
+    return tp_act_sync(act_bytes, tp, syncs_per_layer, n_layers,
+                       algorithm).wire_bytes
 
 
 def pp_boundary_bytes(act_bytes: ArrayLike, pp: ArrayLike) -> ArrayLike:

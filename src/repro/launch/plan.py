@@ -6,19 +6,29 @@ Ridgeline terms analytically —
 
   F    = 6 · N_active · tokens / (dp·tp)
   B_M  = params_bytes/tp  +  2 · L · boundary_act_bytes      (weights + acts)
-  B_N  = DP grad all-reduce (params_bytes/tp over dp)
-         + TP activation all-reduces (2×/layer MLP, 4×/layer attention)
+  t_N  = DP grad all-reduce (params_bytes/tp over dp)
+         + TP activation all-reduces (2×/layer MLP, 4×/layer attention),
+         each priced α–β on the *link its mesh axis rides*:
+         α(link)·steps + bytes/bandwidth(link)
 
-— with the collective wire bytes coming from
+— with collective wire bytes and hop counts coming from
 ``repro.distributed.collectives`` under the chosen algorithm, then evaluates
 the whole candidate set in one :mod:`repro.core.sweep` pass and ranks by the
-projected bound runtime.  Everything is closed-form + ``jax.eval_shape``
-(for exact parameter counts), so planning needs no accelerator and runs in
-seconds.
+projected bound runtime.  With ``pod_size`` set, an axis whose ring extends
+past one pod is priced at the ``pod`` link's (slower) bandwidth — the
+slowest hop bounds a ring — instead of full ICI for everything, which is
+what used to rank multi-pod dp meshes too optimistically.  Everything is
+closed-form + ``jax.eval_shape`` (for exact parameter counts), so planning
+needs no accelerator and runs in seconds.
+
+Calibrated specs carry a ``model_rel_error`` (median |model-vs-measured|
+on whole-step validation points); each ranked plan widens its point
+estimate into the uncertainty band ``[runtime·(1−e), runtime·(1+e)]``.
 
 CLI::
 
     python -m repro.launch.plan --arch dlrm-mlp --chips 16
+    python -m repro.launch.plan --arch dlrm-mlp --chips 32 --pod-size 16
     python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
     python -m repro.launch.plan --hardware list
 
@@ -59,13 +69,19 @@ class MeshPlan:
     algorithm: str
     flops: float                 # per chip
     mem_bytes: float
-    net_bytes: float
+    net_bytes: float             # wire bytes across all axes
     t_compute: float
     t_memory: float
-    t_network: float
+    t_network: float             # α–β time, per-axis links
     runtime: float               # projected step time (bound)
     bottleneck: str
     peak_fraction: float
+    net_steps: float = 0.0       # serialized hops across all axes
+    dp_link: str = "ici"         # link the dp grad sync rides
+    tp_link: str = "ici"         # link the tp act syncs ride
+    runtime_lo: float = 0.0      # runtime·(1−e), e = hw.model_rel_error
+    runtime_hi: float = 0.0      # runtime·(1+e); lo == hi == runtime when
+    #                              the spec carries no measured error
 
     @property
     def chips(self) -> int:
@@ -111,10 +127,36 @@ def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
     return exact(cfg)
 
 
+#: mesh-axis tag of the inter-pod link in ``HardwareSpec.extra_links``
+POD_LINK = "pod"
+
+
+def _axis_link(axis: int, inner: int, pod_size: Optional[int],
+               hw: HardwareSpec) -> Optional[str]:
+    """Link a ring over ``axis`` chips (stride ``inner``) is priced at.
+
+    The mesh is laid out tp-inner / dp-outer.  A ring whose extent
+    ``axis·inner`` exceeds the pod crosses a pod boundary somewhere, and a
+    ring runs at its slowest hop — so the whole axis is priced at the
+    ``pod`` link.  Returns None (primary link) for intra-pod axes, trivial
+    axes, or when no ``pod_size`` is given.
+    """
+    if pod_size is None or axis <= 1 or axis * inner <= pod_size:
+        return None
+    hw.bandwidth_for(POD_LINK)      # actionable KeyError if the spec has none
+    return POD_LINK
+
+
 def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
          batch: int, seq: int = 1,
-         algorithms: Sequence[str] = ("ring",)) -> List[MeshPlan]:
-    """Rank every feasible (dp, tp, algorithm) by projected step time."""
+         algorithms: Sequence[str] = ("ring",),
+         pod_size: Optional[int] = None) -> List[MeshPlan]:
+    """Rank every feasible (dp, tp, algorithm) by projected step time.
+
+    ``pod_size`` (chips per pod) routes each mesh axis onto the link it
+    actually rides: axes contained in one pod use primary ICI, axes that
+    span pods use the slower ``pod`` entry of ``hw.extra_links``.
+    """
     n_total, n_active = param_counts(cfg)
     tokens = float(batch) if cfg.family == "mlp" else float(batch) * seq
     width = _model_width(cfg)
@@ -135,51 +177,79 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     act_bytes = (tokens / dp) * width * act_dtype   # one boundary activation
     mem_bytes = params_bytes / tp + 2.0 * cfg.n_layers * act_bytes
     net_bytes = np.empty_like(dp)
+    net_steps = np.empty_like(dp)
+    t_network = np.empty_like(dp)
+    links: List[Tuple[str, str]] = []
     for i, (d, t, algo) in enumerate(cands):
-        net_bytes[i] = (
-            collectives.dp_grad_sync_bytes(params_bytes / t, d, algo)
-            + collectives.tp_act_sync_bytes(act_bytes[i], t, syncs,
-                                            cfg.n_layers, algo))
-    res = sweep_mod.sweep(flops, mem_bytes, net_bytes, hw)
+        dp_cost = collectives.dp_grad_sync(params_bytes / t, d, algo)
+        tp_cost = collectives.tp_act_sync(act_bytes[i], t, syncs,
+                                          cfg.n_layers, algo)
+        dp_link = _axis_link(d, t, pod_size, hw)    # dp outer, strides tp
+        tp_link = _axis_link(t, 1, pod_size, hw)    # tp inner
+        t_network[i] = (
+            dp_cost.time(hw.bandwidth_for(dp_link), hw.alpha_for(dp_link))
+            + tp_cost.time(hw.bandwidth_for(tp_link),
+                           hw.alpha_for(tp_link)))
+        net_bytes[i] = float(dp_cost.wire_bytes) + float(tp_cost.wire_bytes)
+        net_steps[i] = float(dp_cost.steps) + float(tp_cost.steps)
+        links.append((dp_link or "ici", tp_link or "ici"))
+    # fold per-axis α–β network time into primary-link-equivalent bytes so
+    # one vectorized sweep classifies the whole candidate set consistently
+    eff_net_bytes = t_network * hw.net_bw
+    res = sweep_mod.sweep(flops, mem_bytes, eff_net_bytes, hw, net_steps=0.0)
     labels = res.labels()
 
+    err = max(float(hw.model_rel_error), 0.0)
     plans = [MeshPlan(dp=c[0], tp=c[1], algorithm=c[2],
                       flops=float(res.flops[i]),
                       mem_bytes=float(res.mem_bytes[i]),
-                      net_bytes=float(res.net_bytes[i]),
+                      net_bytes=float(net_bytes[i]),
                       t_compute=float(res.t_compute[i]),
                       t_memory=float(res.t_memory[i]),
                       t_network=float(res.t_network[i]),
                       runtime=float(res.runtime[i]),
                       bottleneck=str(labels[i]),
-                      peak_fraction=float(res.peak_fraction[i]))
+                      peak_fraction=float(res.peak_fraction[i]),
+                      net_steps=float(net_steps[i]),
+                      dp_link=links[i][0], tp_link=links[i][1],
+                      runtime_lo=max(float(res.runtime[i]) * (1.0 - err),
+                                     0.0),
+                      runtime_hi=float(res.runtime[i]) * (1.0 + err))
              for i, c in enumerate(cands)]
     return sorted(plans, key=lambda p: (p.runtime, p.tp))
 
 
 def best_step_time(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
                    batch: int, seq: int = 1,
-                   algorithms: Sequence[str] = ("ring",)) -> float:
+                   algorithms: Sequence[str] = ("ring",),
+                   pod_size: Optional[int] = None) -> float:
     return plan(cfg, hw, chips, batch=batch, seq=seq,
-                algorithms=algorithms)[0].runtime
+                algorithms=algorithms, pod_size=pod_size)[0].runtime
 
 
 def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
                     *, batch: int, tokens: float, params_total: float,
                     params_active: float) -> List[CellReport]:
-    """Planner candidates as the standard per-cell report artifact."""
+    """Planner candidates as the standard per-cell report artifact.
+
+    ``wire_bytes`` are primary-link-equivalent (``t_network · net_bw``) so
+    the report's projection matches the plan's per-axis α–β pricing; the
+    raw per-axis wire bytes ride along in ``wire_bytes_by_kind``.
+    """
     reports = []
     for p in plans:
         rep = CellReport(
             arch=arch, shape=f"plan_b{batch}", mesh=p.mesh,
             step_kind="train_step", num_devices=p.chips, hardware=hw.name,
-            flops=p.flops, mem_bytes=p.mem_bytes, wire_bytes=p.net_bytes,
+            flops=p.flops, mem_bytes=p.mem_bytes,
+            wire_bytes=p.t_network * hw.net_bw,
             wire_bytes_by_kind={"analytic-dp+tp": p.net_bytes},
             peak_memory_per_device=0.0,
             model_flops=6.0 * params_active * tokens,
             params_total=params_total, params_active=params_active,
             tokens_per_step=tokens, variant=p.algorithm,
-            notes=f"rank by plan; {p.algorithm}")
+            notes=f"rank by plan; {p.algorithm}; links "
+                  f"{p.dp_link}/{p.tp_link}")
         reports.append(rep.finalize(hw))
     return reports
 
@@ -189,16 +259,23 @@ def _fmt_ms(s: float) -> str:
 
 
 def format_plan_table(plans: Sequence[MeshPlan]) -> str:
+    banded = any(p.runtime_hi > p.runtime for p in plans)
     head = (f"{'rank':>4} {'mesh':>12} {'algo':>10} {'t_comp ms':>9} "
             f"{'t_mem ms':>9} {'t_net ms':>9} {'step ms':>9} "
-            f"{'bottleneck':>10} {'peak%':>6}")
+            + (f"{'band ms':>19} " if banded else "")
+            + f"{'links':>9} {'bottleneck':>10} {'peak%':>6}")
     lines = [head, "-" * len(head)]
     for i, p in enumerate(plans):
+        band = (f"{_fmt_ms(p.runtime_lo)}..{_fmt_ms(p.runtime_hi).strip():<8} "
+                if banded else "")
+        link = p.dp_link if p.dp_link == p.tp_link else \
+            f"{p.dp_link}/{p.tp_link}"
         lines.append(
             f"{i + 1:>4} {p.mesh:>12} {p.algorithm:>10} "
             f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
             f"{_fmt_ms(p.t_network)} {_fmt_ms(p.runtime)} "
-            f"{p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
+            + band
+            + f"{link:>9} {p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
     return "\n".join(lines)
 
 
@@ -217,6 +294,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--calibrated", action="store_true",
                     help="use the calibrated twin of --hardware "
                          "(artifacts/calibration)")
+    ap.add_argument("--pod-size", type=int, default=None,
+                    help="chips per pod; mesh axes spanning pods are priced "
+                         "at the spec's 'pod' link instead of primary ICI")
     ap.add_argument("--algo", default="ring",
                     choices=list(collectives.ALGORITHMS) + ["all"])
     ap.add_argument("--top", type=int, default=0,
@@ -261,9 +341,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     try:
         plans = plan(cfg, hw, args.chips, batch=batch, seq=args.seq,
-                     algorithms=algos)
-    except ValueError as e:
-        print(f"error: {e}", file=sys.stderr)
+                     algorithms=algos, pod_size=args.pod_size)
+    except (ValueError, KeyError) as e:
+        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
         return 2
     shown = plans[:args.top] if args.top else plans
     tokens = float(batch) if cfg.family == "mlp" else float(batch) * args.seq
@@ -275,6 +355,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(json.dumps({
             "arch": args.arch, "chips": args.chips, "batch": batch,
             "seq": None if cfg.family == "mlp" else args.seq,
+            "pod_size": args.pod_size,
             "algorithms": list(algos),
             "hardware": {"source": "calibrated" if args.calibrated
                          else list_hardware().get(hw.name, "datasheet"),
@@ -294,8 +375,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         args.arch, shown, hw, batch=batch, tokens=tokens,
         params_total=n_total, params_active=n_active)))
     best = plans[0]
+    band = (f" (band {best.runtime_lo * 1e3:.3f}..{best.runtime_hi * 1e3:.3f}"
+            f" ms from measured_rel_error)"
+            if best.runtime_hi > best.runtime else "")
     print(f"\nbest: {best.mesh} ({best.algorithm}) -> "
-          f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound")
+          f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound{band}")
     return 0
 
 

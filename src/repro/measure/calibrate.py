@@ -1,26 +1,40 @@
-"""Fit achievable PEAK/HBM/NET ceilings from measured (WorkUnit, seconds).
+"""Fit achievable α–β ceilings from measured (WorkUnit, seconds).
 
-The Ridgeline's projection is ``t = max(F/PEAK, B_M/HBM, B_N/NET)``; the
-datasheet presets in ``core/hardware`` put vendor peaks on the right-hand
-side, which makes every projection a *lower* bound — often a loose one.
-Following the time-based-roofline line of work (Wang et al.), this module
-replaces the vendor peaks with the ceilings the machine actually achieves:
+The Ridgeline's projection is ``t = max(t_C, t_M, t_N)``; the datasheet
+presets in ``core/hardware`` put vendor peaks on the right-hand side, which
+makes every projection a *lower* bound — often a loose one.  Following the
+time-based-roofline line of work (Wang et al.) and the α–β collective
+models (Chan et al.), this module replaces the vendor peaks with what the
+machine actually achieves, *including latency*:
 
-  1. assign each measurement to its bottleneck resource under the current
-     ceilings (the argmax in the time model),
-  2. per resource, solve the 1-D least-squares ``t ≈ q · (1/peak)`` over the
-     assigned points (closed form: ``1/peak = Σ q·t / Σ q²``),
-  3. repeat until the assignment is a fixed point (a Lloyd-style alternation
-     that converges in a handful of rounds).
+  1. group fit measurements by the resource their bench *saturates by
+     construction* (``Measurement.category``: compute / memory / network —
+     the v1 Lloyd-style re-assignment is gone, because a 2-parameter model
+     lets a large fitted α on one resource swallow the small-payload
+     benches of every other resource, which is exactly the regime the α
+     fit needs),
+  2. per resource, solve the 2-parameter least-squares ``t ≈ α·u + q/peak``
+     over the group — ``u = 1`` per execution for compute/memory (dispatch
+     overhead), ``u = steps`` (serialized hops) for the network — with α
+     clamped to ≥ 0; degenerate systems (one point, collinear regressors)
+     fall back to the v1 bandwidth-only closed form,
+  3. network points are further grouped by the mesh-axis ``link`` tag they
+     rode (``Measurement.link``), and each link's (α, bandwidth) pair is
+     fitted *independently* — the primary link updates
+     ``net_bw``/``alpha_network`` and every other tag updates that named
+     ``extra_links`` entry, so a slower ``pod``/DCI axis is measured, not
+     scaled by one NET ratio.
 
-A resource with no assigned points keeps its prior ceiling and is reported
-as ``datasheet`` rather than ``measured`` — e.g. NET on a single-device
-host where there is no wire to time.
+A resource (or link) with no measurements keeps its prior value and is
+reported as ``datasheet`` rather than ``measured`` — e.g. NET on a
+single-device host where there is no wire to time.  The bottleneck
+*argmax* under the fitted parameters is still reported per measurement
+(the ``assigned`` registry field), as the model's own view of each point.
 
 The result persists as one JSON file per spec under
-``artifacts/calibration/`` (schema ``repro.calibration/v1``); the loader
-side lives in ``core/hardware`` so any consumer can
-``get_hardware(name, calibrated=True)`` without importing jax.
+``artifacts/calibration/`` (schema ``repro.calibration/v2``; v1 entries
+still load, with α = 0); the loader side lives in ``core/hardware`` so any
+consumer can ``get_hardware(name, calibrated=True)`` without importing jax.
 
 CLI::
 
@@ -30,6 +44,7 @@ CLI::
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import sys
@@ -40,6 +55,7 @@ from repro.core.hardware import (CALIBRATED_SUFFIX, CALIBRATION_SCHEMA,
 from repro.measure.microbench import Measurement
 
 _RESOURCES = ("peak_flops", "hbm_bw", "net_bw")
+_ALPHAS = ("alpha_compute", "alpha_memory", "alpha_network")
 
 #: which wall-time statistic a calibration trusts per bench:
 #: 'best' (fastest sample — robust to contention on shared boxes, the
@@ -56,52 +72,190 @@ def _observed(m: Measurement, estimator: str) -> float:
     return m.best if estimator == "best" else m.seconds
 
 
-def _model_seconds(m: Measurement, peaks: Sequence[float]) -> float:
-    return max((q / p if p > 0 else 0.0)
-               for q, p in zip(_quantities(m), peaks))
+def _is_primary(link: Optional[str]) -> bool:
+    return link in HardwareSpec.PRIMARY_LINKS
 
 
-def _assign(m: Measurement, peaks: Sequence[float]) -> int:
-    times = [(q / p if p > 0 else 0.0)
-             for q, p in zip(_quantities(m), peaks)]
+@dataclasses.dataclass
+class _Params:
+    """Mutable fit state: the α–β parameters of one machine."""
+
+    peaks: List[float]               # [peak_flops, hbm_bw, net_bw]
+    alphas: List[float]              # [alpha_compute, alpha_memory, alpha_network]
+    link_bws: Dict[str, float]       # extra (non-primary) link bandwidths
+    link_alphas: Dict[str, float]    # per-hop α of those links
+
+    @staticmethod
+    def from_spec(hw: HardwareSpec) -> "_Params":
+        return _Params(
+            peaks=[hw.peak_flops, hw.hbm_bw, hw.net_bw],
+            alphas=[hw.alpha_compute, hw.alpha_memory, hw.alpha_network],
+            link_bws=dict(hw.extra_links),
+            link_alphas={k: hw.link_alphas.get(k, hw.alpha_network)
+                         for k in hw.extra_links})
+
+    def spec(self) -> HardwareSpec:
+        """The current fit state as a HardwareSpec (for shared pricing).
+
+        Cached after first use: pricing only happens once the parameters
+        are final (the fit loop mutates fields but never prices mid-fit).
+        """
+        if getattr(self, "_spec_cache", None) is None:
+            self._spec_cache = HardwareSpec(
+                name="_fit", peak_flops=self.peaks[0], hbm_bw=self.peaks[1],
+                net_bw=self.peaks[2], extra_links=dict(self.link_bws),
+                alpha_compute=self.alphas[0], alpha_memory=self.alphas[1],
+                alpha_network=self.alphas[2],
+                link_alphas=dict(self.link_alphas))
+        return self._spec_cache
+
+    def times(self, m: Measurement) -> Tuple[float, float, float]:
+        from repro.core.ridgeline import resource_times
+        link = m.link
+        if not _is_primary(link) and link not in self.link_bws:
+            link = None    # link never seen (not even in the datasheet):
+            #                price at the primary until a fit learns it
+        return resource_times(m.work, self.spec(), link=link)
+
+
+def _model_seconds(m: Measurement, params: _Params) -> float:
+    return max(params.times(m))
+
+
+def _assign(m: Measurement, params: _Params) -> int:
+    times = params.times(m)
     return max(range(3), key=lambda r: (times[r], -r))
+
+
+def _fit_alpha_beta(points: Sequence[Tuple[float, float, float]],
+                    prior_peak: float) -> Tuple[float, float]:
+    """Least-squares (α, peak) for ``t ≈ α·u + q/peak`` over (u, q, t).
+
+    Physical constraints: α ≥ 0, peak > 0, and — since every observation
+    satisfies ``t_i = α·u_i + q_i/peak ≥ α·u_i`` — the per-unit α cannot
+    exceed ``min(t_i/u_i)``; a noisy intercept above that bound is clamped
+    there and the peak refitted (noisy small boxes routinely produce such
+    intercepts).  Degenerate systems (collinear regressors, a single point)
+    drop the α column and reduce to the v1 bandwidth-only closed form
+    ``1/peak = Σq·t / Σq²``.  ``prior_peak`` (the incoming ceiling) is kept
+    whenever the data cannot determine the peak at all.
+    """
+    # absolute-error LS, deliberately: relative weighting would give the
+    # latency-dominated small points decades more weight, and on noisy
+    # shared boxes their jitter then whipsaws the fitted peak; absolute
+    # weighting anchors the ceiling on the saturating sizes and lets the
+    # intercept soak up what the small points agree on
+    su2 = sq2 = suq = sut = sqt = 0.0
+    for u, q, t in points:
+        su2 += u * u
+        sq2 += q * q
+        suq += u * q
+        sut += u * t
+        sqt += q * t
+    alpha_max = min((t / u for u, q, t in points if u > 0), default=0.0)
+    times = [t for _, _, t in points if t > 0]
+    # identifiability guard: separating an intercept from a slope needs
+    # observed times spanning real dynamic range, otherwise measurement
+    # noise lands almost entirely in α (two same-scale points fit *any*
+    # intercept exactly); below the threshold fall back to β-only
+    identifiable = bool(times) and max(times) >= 3.0 * min(times)
+
+    def beta_only() -> Tuple[float, float]:
+        if sq2 > 0 and sqt > 0:
+            return 0.0, sq2 / sqt
+        return 0.0, prior_peak
+
+    def with_alpha(alpha: float) -> Tuple[float, float]:
+        """Refit the peak with α held fixed (boundary of the constraint)."""
+        resid = sqt - alpha * suq
+        if sq2 > 0 and resid > 0:
+            return alpha, sq2 / resid
+        return alpha, prior_peak
+
+    det = su2 * sq2 - suq * suq
+    if not identifiable or det <= 1e-12 * max(su2 * sq2, 1e-300):
+        return beta_only()
+    alpha = (sut * sq2 - sqt * suq) / det
+    c = (su2 * sqt - suq * sut) / det           # c = 1/peak
+    if alpha < 0:
+        return beta_only()
+    if alpha > alpha_max:
+        return with_alpha(alpha_max)
+    if c <= 0:
+        # all observed time is latency: α alone, peak stays at the prior
+        resid = sut - suq / prior_peak if prior_peak > 0 else sut
+        return min(max(resid / su2, 0.0), alpha_max), prior_peak
+    return alpha, 1.0 / c
 
 
 @dataclasses.dataclass(frozen=True)
 class Calibration:
-    """Fitted achievable ceilings + the evidence behind them."""
+    """Fitted achievable α–β parameters + the evidence behind them."""
 
     name: str
     base: HardwareSpec
     peak_flops: float
     hbm_bw: float
     net_bw: float
-    sources: Dict[str, str]          # resource -> 'measured' | 'datasheet'
+    sources: Dict[str, str]          # resource/link -> 'measured' | 'datasheet'
     iterations: int
     fit_measurements: Tuple[Measurement, ...]
     validation_measurements: Tuple[Measurement, ...] = ()
     estimator: str = "best"          # see ESTIMATORS
+    alpha_compute: float = 0.0       # s per execution
+    alpha_memory: float = 0.0        # s per execution
+    alpha_network: float = 0.0       # s per serialized hop (primary link)
+    link_bws: Dict[str, float] = dataclasses.field(default_factory=dict)
+    link_alphas: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def peaks(self) -> Tuple[float, float, float]:
         return (self.peak_flops, self.hbm_bw, self.net_bw)
 
+    @property
+    def alphas(self) -> Tuple[float, float, float]:
+        return (self.alpha_compute, self.alpha_memory, self.alpha_network)
+
+    @functools.cached_property
+    def _pricing_params(self) -> _Params:
+        return self._params()
+
+    def _params(self) -> _Params:
+        # unmeasured links keep their datasheet bandwidths here too, so
+        # model_seconds/rel_error agree with what spec() would predict
+        link_bws = dict(self.base.extra_links)
+        link_bws.update(self.link_bws)
+        return _Params(peaks=list(self.peaks), alphas=list(self.alphas),
+                       link_bws=link_bws,
+                       link_alphas=dict(self.link_alphas))
+
     def spec(self) -> HardwareSpec:
-        """The calibrated HardwareSpec (extra links scale with NET)."""
-        scale = self.net_bw / self.base.net_bw if self.base.net_bw else 1.0
+        """The calibrated HardwareSpec.
+
+        Extra links carry their *own* fitted (α, bandwidth) where measured;
+        unmeasured links keep the datasheet number rather than being scaled
+        by the primary-NET ratio (the v1 behaviour this fit replaces).
+        """
+        extra = dict(self.base.extra_links)
+        extra.update(self.link_bws)
+        summary = self.error_summary("validation")
         return HardwareSpec(
             name=self.name,
             peak_flops=self.peak_flops,
             hbm_bw=self.hbm_bw,
             net_bw=self.net_bw,
-            extra_links={k: v * scale
-                         for k, v in self.base.extra_links.items()},
+            extra_links=extra,
+            alpha_compute=self.alpha_compute,
+            alpha_memory=self.alpha_memory,
+            alpha_network=self.alpha_network,
+            link_alphas=dict(self.link_alphas),
+            model_rel_error=summary["median_abs_rel_error"],
             vmem_bytes=self.base.vmem_bytes,
         )
 
     # ---- model-vs-measured error --------------------------------------------
     def model_seconds(self, m: Measurement) -> float:
-        return _model_seconds(m, self.peaks)
+        return _model_seconds(m, self._pricing_params)
 
     def observed_seconds(self, m: Measurement) -> float:
         return _observed(m, self.estimator)
@@ -131,13 +285,17 @@ class Calibration:
 
     # ---- persistence ---------------------------------------------------------
     def to_dict(self) -> Dict:
+        params = self._params()
+
         def dump(ms: Sequence[Measurement]) -> List[Dict]:
             out = []
             for m in ms:
                 d = m.to_dict()
-                d["assigned"] = _RESOURCES[_assign(m, self.peaks)]
-                d["model_seconds"] = self.model_seconds(m)
-                d["rel_error"] = self.rel_error(m)
+                d["assigned"] = _RESOURCES[_assign(m, params)]
+                model = _model_seconds(m, params)
+                obs = self.observed_seconds(m)
+                d["model_seconds"] = model
+                d["rel_error"] = (model - obs) / obs
                 out.append(d)
             return out
 
@@ -149,12 +307,17 @@ class Calibration:
             "peak_flops": self.peak_flops,
             "hbm_bw": self.hbm_bw,
             "net_bw": self.net_bw,
+            "alpha_compute": self.alpha_compute,
+            "alpha_memory": self.alpha_memory,
+            "alpha_network": self.alpha_network,
             "extra_links": dict(self.spec().extra_links),
+            "link_alphas": dict(self.link_alphas),
             "vmem_bytes": self.base.vmem_bytes,
             "sources": dict(self.sources),
             "datasheet": {"peak_flops": self.base.peak_flops,
                           "hbm_bw": self.base.hbm_bw,
-                          "net_bw": self.base.net_bw},
+                          "net_bw": self.base.net_bw,
+                          "extra_links": dict(self.base.extra_links)},
             "fit": {"iterations": self.iterations,
                     **self.error_summary("fit")},
             "validation": self.error_summary("validation"),
@@ -183,10 +346,22 @@ class Calibration:
                  f"estimator {self.estimator}, "
                  f"{self.iterations} fit iterations)"]
         datasheet = (self.base.peak_flops, self.base.hbm_bw, self.base.net_bw)
-        for r, fitted, ds in zip(_RESOURCES, self.peaks, datasheet):
+        units = ("s/exec", "s/exec", "s/hop")
+        for r, a, fitted, alpha, ds, unit in zip(
+                _RESOURCES, _ALPHAS, self.peaks, self.alphas, datasheet,
+                units):
             lines.append(
                 f"  {r:>10}: {fitted:.4g} ({self.sources[r]}; datasheet "
-                f"{ds:.4g}, x{fitted / ds:.3f})")
+                f"{ds:.4g}, x{fitted / ds:.3f}) "
+                f"{a}={alpha:.3g} {unit}")
+        for tag in sorted(self.base.extra_links):
+            bw = self.link_bws.get(tag, self.base.extra_links[tag])
+            src = self.sources.get(f"link:{tag}", "datasheet")
+            lines.append(
+                f"  link {tag:>6}: {bw:.4g} ({src}; datasheet "
+                f"{self.base.extra_links[tag]:.4g}) "
+                f"alpha={self.link_alphas.get(tag, self.alpha_network):.3g} "
+                f"s/hop")
         for which in ("fit", "validation"):
             s = self.error_summary(which)
             if s["n"]:
@@ -211,50 +386,86 @@ def fit_ceilings(measurements: Sequence[Measurement],
                  validation: Sequence[Measurement] = (),
                  estimator: str = "best",
                  max_iterations: int = 32) -> Calibration:
-    """Alternating assign/least-squares fit of the three ceilings.
+    """Per-resource α–β least-squares fit of the machine parameters.
 
-    ``measurements`` drive the fit; ``validation`` points (e.g. whole model
-    steps) only contribute to the reported error.  Initialization is the
-    datasheet ``base``, so resources with no informative measurements keep
-    their vendor numbers.  ``estimator`` picks the wall-time statistic
-    (see :data:`ESTIMATORS`).
+    Fit measurements are grouped by ``category`` (the resource their bench
+    saturates by construction) and network points further by link tag; each
+    group solves ``t ≈ α·u + q/peak`` (module docstring has the rationale
+    for dropping the v1 Lloyd re-assignment).  ``validation`` points (e.g.
+    whole model steps) only contribute to the reported error.  Resources
+    and links with no measurements keep the datasheet ``base`` numbers
+    (α = 0).  ``estimator`` picks the wall-time statistic (see
+    :data:`ESTIMATORS`).  ``max_iterations`` is accepted for API
+    compatibility and ignored.
     """
     if not measurements:
         raise ValueError("need at least one measurement to fit")
     if estimator not in ESTIMATORS:
         raise ValueError(f"estimator {estimator!r} not in {ESTIMATORS}")
-    peaks = [base.peak_flops, base.hbm_bw, base.net_bw]
-    assignment: Optional[List[int]] = None
-    iterations = 0
-    for _ in range(max_iterations):
-        iterations += 1
-        new_assignment = [_assign(m, peaks) for m in measurements]
-        if new_assignment == assignment:
-            break
-        assignment = new_assignment
-        for r in range(3):
-            num = 0.0
-            den = 0.0
-            for m, a in zip(measurements, assignment):
-                if a != r:
-                    continue
-                q = _quantities(m)[r]
-                num += q * _observed(m, estimator)
-                den += q * q
-            if den > 0 and num > 0:
-                peaks[r] = den / num      # 1/peak = Σqt/Σq² -> peak = Σq²/Σqt
-    assignment = [_assign(m, peaks) for m in measurements]
-    sources = {res: ("measured" if any(a == r for a in assignment)
-                     else "datasheet")
+    del max_iterations  # category grouping needs no alternation (see above)
+    groups = {"compute": 0, "memory": 1, "network": 2}
+    # whole-step points can never constrain a per-resource fit; when the
+    # caller hands a full suite (e.g. microbench.default_suite()) route
+    # them to validation rather than silently counting them as fit evidence
+    steps = [m for m in measurements if m.category not in groups]
+    measurements = [m for m in measurements if m.category in groups]
+    validation = tuple(validation) + tuple(steps)
+    if not measurements:
+        raise ValueError("need at least one compute/memory/network "
+                         "measurement to fit (step points only validate)")
+    params = _Params.from_spec(base)
+    measured_links: set = set()
+    fitted = [False, False, False]
+    # compute / memory: one execution pays one α (u = 1)
+    for r in (0, 1):
+        pts = [(1.0, _quantities(m)[r], _observed(m, estimator))
+               for m in measurements if groups.get(m.category) == r]
+        if pts:
+            params.alphas[r], params.peaks[r] = \
+                _fit_alpha_beta(pts, params.peaks[r])
+            fitted[r] = True
+    # network: α multiplies serialized hops, fitted per link tag
+    by_link: Dict[Optional[str], List[Tuple[float, float, float]]] = {}
+    for m in measurements:
+        if groups.get(m.category) != 2:
+            continue
+        tag = None if _is_primary(m.link) else m.link
+        by_link.setdefault(tag, []).append(
+            (m.work.net_steps, m.work.net_bytes, _observed(m, estimator)))
+    for tag, pts in by_link.items():
+        if tag is None:
+            params.alphas[2], params.peaks[2] = \
+                _fit_alpha_beta(pts, params.peaks[2])
+            fitted[2] = True
+        else:
+            prior = params.link_bws.get(tag, params.peaks[2])
+            alpha, bw = _fit_alpha_beta(pts, prior)
+            params.link_alphas[tag] = alpha
+            params.link_bws[tag] = bw
+            measured_links.add(tag)
+    iterations = 1
+    sources = {res: ("measured" if fitted[r] else "datasheet")
                for r, res in enumerate(_RESOURCES)}
+    for tag in set(base.extra_links) | measured_links:
+        sources[f"link:{tag}"] = ("measured" if tag in measured_links
+                                  else "datasheet")
+    # only persist per-link parameters that were actually fitted — the
+    # spec() fallback keeps unmeasured links at their datasheet values
+    link_bws = {t: params.link_bws[t] for t in measured_links}
+    link_alphas = {t: params.link_alphas[t] for t in measured_links}
     return Calibration(
         name=name or base.name + CALIBRATED_SUFFIX,
         base=base,
-        peak_flops=peaks[0], hbm_bw=peaks[1], net_bw=peaks[2],
+        peak_flops=params.peaks[0], hbm_bw=params.peaks[1],
+        net_bw=params.peaks[2],
         sources=sources, iterations=iterations,
         fit_measurements=tuple(measurements),
         validation_measurements=tuple(validation),
         estimator=estimator,
+        alpha_compute=params.alphas[0],
+        alpha_memory=params.alphas[1],
+        alpha_network=params.alphas[2],
+        link_bws=link_bws, link_alphas=link_alphas,
     )
 
 
@@ -295,7 +506,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes + few repeats; finishes in <60s on CPU")
     ap.add_argument("--repeats", type=int, default=None,
-                    help="timing repeats per bench (default 3 smoke / 7 full)")
+                    help="timing repeats per bench and pass "
+                         "(default 9 smoke / 11 full, x3 merged passes)")
     ap.add_argument("--estimator", default="best", choices=ESTIMATORS,
                     help="wall-time statistic to fit on: 'best' sample "
                          "(robust on shared boxes) or 'median'")

@@ -39,14 +39,21 @@ from repro.measure.timers import TimingStats, time_callable
 #: bench categories, also used by calibrate.py to split fit vs validation
 CATEGORIES = ("compute", "memory", "network", "step")
 
-#: sizes start where the resource saturates: sub-512 GEMMs and sub-LLC
-#: streams time dispatch overhead and cache, not the ceiling being fitted
-SMOKE_MATMUL_SIZES = (512, 768, 1024)
-FULL_MATMUL_SIZES = (512, 1024, 1536, 2048)
+#: large sizes saturate the β (bandwidth) term; the *small* entries exist to
+#: expose the α intercept the v2 fit estimates (t = α + q/peak per resource
+#: — a fit over saturating sizes alone cannot separate α from 1/peak)
+SMOKE_MATMUL_SIZES = (256, 512, 768, 1024)
+FULL_MATMUL_SIZES = (256, 512, 1024, 1536, 2048)
+#: streams stay well above LLC size — a sub-cache stream measures cache,
+#: not HBM, and silently poisons both the α_M intercept and the ceiling
 SMOKE_STREAM_MB = (32, 64)
 FULL_STREAM_MB = (32, 64, 128, 256)
 SMOKE_COLLECTIVE_MB = (4, 16)
 FULL_COLLECTIVE_MB = (4, 16, 64)
+#: small-payload collectives: the per-hop α dominates these, which is what
+#: lets the network fit see latency at all (ISSUE 3 / ROADMAP α item)
+SMOKE_COLLECTIVE_KB = (64, 256)
+FULL_COLLECTIVE_KB = (64, 256, 1024)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,12 +85,18 @@ class Measurement:
     def best(self) -> float:
         return self.best_seconds or self.seconds
 
+    @property
+    def link(self) -> Optional[str]:
+        """Network link tag this measurement exercised (None = primary)."""
+        return dict(self.meta).get("link")
+
     def to_dict(self) -> Dict:
         return {
             "name": self.work.name,
             "flops": self.work.flops,
             "mem_bytes": self.work.mem_bytes,
             "net_bytes": self.work.net_bytes,
+            "net_steps": self.work.net_steps,
             "seconds": self.seconds,
             "best_seconds": self.best,
             "category": self.category,
@@ -96,7 +109,8 @@ class Measurement:
     def from_dict(d: Dict) -> "Measurement":
         return Measurement(
             work=WorkUnit(d["name"], d["flops"], d["mem_bytes"],
-                          d["net_bytes"]),
+                          d["net_bytes"],
+                          net_steps=d.get("net_steps", 0.0)),
             seconds=d["seconds"], category=d["category"],
             best_seconds=d.get("best_seconds", 0.0),
             rel_spread=d.get("rel_spread", 0.0),
@@ -193,14 +207,20 @@ def memory_benches(sizes_mb: Sequence[int] = SMOKE_STREAM_MB, *,
 
 
 def collective_benches(sizes_mb: Sequence[int] = SMOKE_COLLECTIVE_MB, *,
-                       repeats: int = 5) -> List[Measurement]:
+                       sizes_kb: Sequence[int] = SMOKE_COLLECTIVE_KB,
+                       repeats: int = 5,
+                       link: str = "net") -> List[Measurement]:
     """Ring-priced ``psum`` all-reduces across all local devices.
 
     Returns ``[]`` on a single-device process — there is no wire to measure;
     the calibrate CLI then keeps the datasheet NET ceiling and says so.
-    Payload is the per-chip logical tensor; wire bytes follow the
-    ``distributed/collectives`` ring model, so calibrated NET bandwidth is
-    directly comparable with the analytic planner's B_N accounting.
+    Payload is the per-chip logical tensor; wire bytes *and hop counts*
+    follow the ``distributed/collectives`` ring model, so the calibrated
+    per-link (α, bandwidth) pair is directly comparable with the analytic
+    planner's α–β accounting.  The KB-scale payloads are latency-dominated
+    by construction — without them the fit cannot see α.  ``link`` tags
+    which mesh axis these collectives rode (meta key the per-axis fit
+    groups by); the default is the primary link.
     """
     import jax
     import jax.numpy as jnp
@@ -212,19 +232,24 @@ def collective_benches(sizes_mb: Sequence[int] = SMOKE_COLLECTIVE_MB, *,
         return []
     psum = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")
     out = []
-    for mb in sizes_mb:
-        n = mb * 1024 * 1024 // 4
+    sizes = [(kb * 1024, f"allreduce_{kb}kb_x{n_dev}") for kb in sizes_kb]
+    sizes += [(mb * 1024 * 1024, f"allreduce_{mb}mb_x{n_dev}")
+              for mb in sizes_mb]
+    for nbytes, name in sizes:
+        n = max(1, nbytes // 4)
         x = jnp.ones((n_dev, n), jnp.float32)
         payload = float(n) * 4.0
-        wire = float(collectives.all_reduce_bytes(payload, n_dev, "ring"))
+        cost = collectives.all_reduce(payload, n_dev, "ring")
         # per-chip reduction flops (~(n−1)/n adds per element) and the
         # staging traffic of touching the payload twice
-        work = WorkUnit(f"allreduce_{mb}mb_x{n_dev}",
+        work = WorkUnit(name,
                         flops=float(n),
                         mem_bytes=2.0 * payload,
-                        net_bytes=wire)
+                        net_bytes=float(cost.wire_bytes),
+                        net_steps=float(cost.steps))
         out.append(_measure(work.name, lambda x=x: psum(x),
-                            work, "network", repeats=repeats))
+                            work, "network", repeats=repeats,
+                            meta=(("link", link),)))
     return out
 
 
@@ -299,12 +324,55 @@ def serve_step_bench(batch: int = 8, max_len: int = 64, *,
                        meta=(("kind", "serve_step"), ("arch", "smollm-135m")))
 
 
-def step_benches(*, smoke: bool = True, repeats: int = 3) -> List[Measurement]:
-    if smoke:
-        return [train_step_bench(repeats=repeats),
-                serve_step_bench(repeats=repeats)]
-    return [train_step_bench(batch=256, width=512, layers=4, repeats=repeats),
-            serve_step_bench(batch=16, max_len=128, repeats=repeats)]
+def step_benches(*, smoke: bool = True, repeats: int = 3,
+                 passes: int = 2) -> List[Measurement]:
+    """Whole-step validation points spanning scales.
+
+    Three points even in smoke mode: a median over two validation steps is
+    just their mean, so one structurally-hard point (the tiny decode step,
+    whose sub-peak GEMMs no max-of-ceilings model captures) used to define
+    the reported error by itself.
+
+    Each bench runs ``passes`` times spread across the suite and keeps the
+    pass with the fastest best-sample (see :func:`merge_passes`).
+    """
+    def one_pass() -> List[Measurement]:
+        out = [train_step_bench(repeats=repeats),
+               train_step_bench(batch=256, width=512, layers=4,
+                                repeats=repeats),
+               serve_step_bench(repeats=repeats)]
+        if not smoke:
+            out.append(serve_step_bench(batch=16, max_len=128,
+                                        repeats=repeats))
+        return out
+
+    return merge_passes([one_pass() for _ in range(max(passes, 1))])
+
+
+#: a pass best this far below the median-of-passes is treated as a fluke
+_FLUKE_RATIO = 0.4
+
+
+def merge_passes(passes: Sequence[List[Measurement]]) -> List[Measurement]:
+    """Per bench, keep the fastest pass — unless it looks like a fluke.
+
+    Contention on small shared boxes comes in seconds-long bursts, so
+    back-to-back repeats of one bench are correlated — keeping the fastest
+    of several *separated* passes is how the ``best`` estimator reaches
+    the uncontended time.  But a single pass can also be anomalously
+    *fast* (page-cache/allocator flukes on streams), and a plain min
+    selects exactly those flukes into the fit; a best more than
+    ``_FLUKE_RATIO`` below the median-of-passes falls back to the median
+    pass instead.
+    """
+    merged = []
+    for group in zip(*passes):
+        ranked = sorted(group, key=lambda m: m.best)
+        fastest = ranked[0]
+        median = ranked[(len(ranked) - 1) // 2]
+        merged.append(fastest if fastest.best >= _FLUKE_RATIO * median.best
+                      else median)
+    return merged
 
 
 # --- the suite ----------------------------------------------------------------
@@ -324,17 +392,36 @@ def _global_warmup() -> None:
 
 
 def default_suite(*, smoke: bool = True, repeats: Optional[int] = None,
-                  steps: bool = True) -> List[Measurement]:
-    """The standard calibration suite: micro fits + step validation points."""
-    r = repeats if repeats is not None else (5 if smoke else 7)
+                  steps: bool = True, passes: int = 3) -> List[Measurement]:
+    """The standard calibration suite: micro fits + step validation points.
+
+    Default repeats are deliberately generous, and the whole suite runs
+    ``passes`` times with the fastest best-sample kept per bench
+    (:func:`merge_passes`): the ``best`` estimator the fit uses converges
+    to the uncontended time only with enough *decorrelated* draws, and on
+    small shared boxes contention noise — not bench cost — is what limits
+    calibration quality.
+    """
+    r = repeats if repeats is not None else (9 if smoke else 11)
     _global_warmup()
-    out: List[Measurement] = []
-    out += matmul_benches(SMOKE_MATMUL_SIZES if smoke else FULL_MATMUL_SIZES,
-                          repeats=r)
-    out += memory_benches(SMOKE_STREAM_MB if smoke else FULL_STREAM_MB,
-                          repeats=r)
-    out += collective_benches(
-        SMOKE_COLLECTIVE_MB if smoke else FULL_COLLECTIVE_MB, repeats=r)
-    if steps:
-        out += step_benches(smoke=smoke, repeats=max(2, r - 1))
-    return out
+
+    def one_pass() -> List[Measurement]:
+        # steps lead the pass: they are the validation criterion, and on
+        # burst-throttled boxes whatever runs last in a sustained load
+        # window measures systematically slow — putting the whole-step
+        # clocks next to the micro clocks they are compared against keeps
+        # the fit and its validation in the same contention regime
+        out: List[Measurement] = []
+        if steps:
+            out += step_benches(smoke=smoke, repeats=r, passes=1)
+        out += matmul_benches(
+            SMOKE_MATMUL_SIZES if smoke else FULL_MATMUL_SIZES, repeats=r)
+        out += memory_benches(SMOKE_STREAM_MB if smoke else FULL_STREAM_MB,
+                              repeats=r)
+        out += collective_benches(
+            SMOKE_COLLECTIVE_MB if smoke else FULL_COLLECTIVE_MB,
+            sizes_kb=SMOKE_COLLECTIVE_KB if smoke else FULL_COLLECTIVE_KB,
+            repeats=r)
+        return out
+
+    return merge_passes([one_pass() for _ in range(max(passes, 1))])

@@ -62,6 +62,7 @@ class TestRoundtrip:
             ck.restore(_tree())
 
 
+@pytest.mark.slow
 class TestRestartDeterminism:
     """train(2N) == train(N) -> save -> restore -> train(N): bitwise."""
 
@@ -92,6 +93,7 @@ class TestRestartDeterminism:
 
 
 class TestElastic:
+    @pytest.mark.slow
     def test_restore_on_different_mesh(self, tmp_path):
         """Save unsharded, restore with shardings for a (1,1) mesh — the
         mesh-shape-independence contract (full logical arrays on disk)."""

@@ -73,6 +73,7 @@ class TestFlashAttention:
         dict(B=1, S=1024, H=8, K=2, dh=64, causal=True, window=256),
         dict(B=2, S=512, H=6, K=3, dh=64, causal=False, window=0),
     ])
+    @pytest.mark.slow
     def test_sweep(self, dtype, cfg):
         B, S, H, K, dh = cfg["B"], cfg["S"], cfg["H"], cfg["K"], cfg["dh"]
         q = jax.random.normal(KEY, (B, S, H, dh), dtype)
@@ -107,6 +108,7 @@ class TestFlashAttention:
         assert _rel_err(out_flash, out_jnp) < 1e-4
 
 
+@pytest.mark.slow
 class TestFlashProperty:
     @given(s_blocks=st.integers(1, 3), h=st.sampled_from([2, 4]),
            kv=st.sampled_from([1, 2]), causal=st.booleans())

@@ -4,6 +4,7 @@ import sys
 import pytest
 
 
+@pytest.mark.slow
 def test_train_launcher(tmp_path, capsys):
     from repro.launch.train import main
     rc = main(["--arch", "smollm-135m", "--reduced", "--steps", "12",
@@ -16,6 +17,7 @@ def test_train_launcher(tmp_path, capsys):
     assert any(n.startswith("step_") for n in os.listdir(tmp_path))
 
 
+@pytest.mark.slow
 def test_serve_launcher(capsys):
     from repro.launch.serve import main
     rc = main(["--arch", "smollm-135m", "--reduced", "--batch", "2",

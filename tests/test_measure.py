@@ -163,6 +163,17 @@ def test_fit_empty_raises():
         fit_ceilings([], BASE)
 
 
+def test_step_points_in_fit_list_route_to_validation():
+    """Passing a full suite (micro + steps) must not count steps as fit."""
+    step = _synth("step", 1e10, 1e9, 0.0, category="step")
+    calib = fit_ceilings(synth_suite() + [step], BASE)
+    assert calib.peak_flops == pytest.approx(TRUE.peak_flops, rel=1e-9)
+    assert calib.error_summary("fit")["n"] == 6          # steps excluded
+    assert calib.error_summary("validation")["n"] == 1   # ...and validated
+    with pytest.raises(ValueError, match="only validate"):
+        fit_ceilings([step], BASE)
+
+
 def test_validation_points_do_not_steer_fit():
     step = _synth("step", 1e10, 1e9, 0.0, category="step")
     wild = Measurement(work=step.work, seconds=step.seconds * 100,
@@ -270,25 +281,131 @@ def test_calibration_name_cannot_shadow_preset(tmp_path):
     assert listing["clx"] == "datasheet"
 
 
-def test_calibrated_spec_scales_extra_links(tmp_path):
+def test_unmeasured_links_keep_datasheet_values():
+    """v2 behaviour: per-link bandwidths are fitted, never ratio-scaled."""
     base = HardwareSpec(name="b", peak_flops=1e12, hbm_bw=1e11, net_bw=1e10,
                         extra_links={"pod": 5e9})
     m = Measurement(work=WorkUnit("ar", 0.0, 0.0, 1e8), seconds=0.1,
                     best_seconds=0.1, category="network")
-    calib = fit_ceilings([m], base)
+    pod_step = Measurement(
+        work=WorkUnit("pod_step", 0.0, 0.0, 5e9, net_steps=0.0),
+        seconds=1.0, best_seconds=1.0, category="step",
+        meta=(("link", "pod"),))
+    calib = fit_ceilings([m], base, validation=[pod_step])
     assert calib.net_bw == pytest.approx(1e9)
-    # slower links keep their ratio to the primary link
-    assert calib.spec().extra_links["pod"] == pytest.approx(5e8)
+    # the primary link was measured 10x slower than datasheet, but nobody
+    # timed the pod link — it must NOT be scaled by the primary's ratio
+    assert calib.spec().extra_links["pod"] == pytest.approx(5e9)
+    assert calib.sources["link:pod"] == "datasheet"
+    # error reporting prices pod-tagged measurements at the same datasheet
+    # bandwidth the spec would use, not at the fitted primary link
+    assert calib.model_seconds(pod_step) == pytest.approx(5e9 / 5e9)
+
+
+def test_measured_link_fits_independently():
+    base = HardwareSpec(name="b", peak_flops=1e12, hbm_bw=1e11, net_bw=1e10,
+                        extra_links={"pod": 5e9})
+    # primary link at 1e9 B/s; pod link at 1e8 B/s with 1ms/hop latency
+    prim = [Measurement(work=WorkUnit(f"ar{i}", 0.0, 0.0, q, net_steps=6.0),
+                        seconds=q / 1e9 + 6 * 1e-5, category="network",
+                        meta=(("link", "net"),))
+            for i, q in enumerate((1e5, 1e8))]
+    pod = [Measurement(work=WorkUnit(f"pod{i}", 0.0, 0.0, q, net_steps=2.0),
+                       seconds=q / 1e8 + 2 * 1e-3, category="network",
+                       meta=(("link", "pod"),))
+           for i, q in enumerate((1e5, 1e8))]
+    calib = fit_ceilings(prim + pod, base, estimator="median")
+    assert calib.net_bw == pytest.approx(1e9, rel=1e-6)
+    assert calib.alpha_network == pytest.approx(1e-5, rel=1e-6)
+    assert calib.link_bws["pod"] == pytest.approx(1e8, rel=1e-6)
+    assert calib.link_alphas["pod"] == pytest.approx(1e-3, rel=1e-6)
+    assert calib.sources["link:pod"] == "measured"
+    spec = calib.spec()
+    assert spec.bandwidth_for("pod") == pytest.approx(1e8, rel=1e-6)
+    assert spec.alpha_for("pod") == pytest.approx(1e-3, rel=1e-6)
+    # model error is exact for the synthetic points
+    assert calib.error_summary("fit")["max_abs_rel_error"] < 1e-9
+
+
+def test_alpha_beta_fit_recovers_known_latency():
+    """t = α + q/peak per resource, α·steps + q/bw for the network."""
+    a_c, a_m, a_n = 1e-4, 5e-5, 2e-6
+    suite = []
+    for i, f in enumerate((1e9, 8e9, 5e10)):
+        t = a_c + f / TRUE.peak_flops
+        suite.append(Measurement(work=WorkUnit(f"g{i}", f, 1e3, 0.0),
+                                 seconds=t, best_seconds=t,
+                                 category="compute"))
+    for i, bm in enumerate((4e8, 1.6e9)):
+        t = a_m + bm / TRUE.hbm_bw
+        suite.append(Measurement(work=WorkUnit(f"s{i}", 1e3, bm, 0.0),
+                                 seconds=t, best_seconds=t,
+                                 category="memory"))
+    for i, bn in enumerate((4e4, 4e7)):
+        t = a_n * 6.0 + bn / TRUE.net_bw
+        suite.append(Measurement(work=WorkUnit(f"ar{i}", 1e2, 1e3, bn,
+                                               net_steps=6.0),
+                                 seconds=t, best_seconds=t,
+                                 category="network"))
+    calib = fit_ceilings(suite, BASE)
+    assert calib.peak_flops == pytest.approx(TRUE.peak_flops, rel=1e-6)
+    assert calib.hbm_bw == pytest.approx(TRUE.hbm_bw, rel=1e-6)
+    assert calib.net_bw == pytest.approx(TRUE.net_bw, rel=1e-6)
+    assert calib.alpha_compute == pytest.approx(a_c, rel=1e-6)
+    assert calib.alpha_memory == pytest.approx(a_m, rel=1e-6)
+    assert calib.alpha_network == pytest.approx(a_n, rel=1e-6)
+    assert calib.error_summary("fit")["max_abs_rel_error"] < 1e-9
+    # the calibrated spec reproduces the α-aware model end to end
+    spec = calib.spec()
+    from repro.core.ridgeline import analyze
+    for m in suite:
+        assert analyze(m.work, spec).runtime == \
+            pytest.approx(m.seconds, rel=1e-6)
+
+
+def test_v1_registry_entries_still_load(tmp_path):
+    """Read-compat: a v1 (bandwidth-only) entry loads with all α = 0."""
+    v1 = {"schema": "repro.calibration/v1", "name": "old_cal",
+          "base": "clx", "peak_flops": 2e11, "hbm_bw": 5e9, "net_bw": 8e8,
+          "extra_links": {"pod": 4e8}, "vmem_bytes": 1024}
+    (tmp_path / "old_cal.json").write_text(json.dumps(v1))
+    spec = spec_from_calibration(v1)
+    assert spec.peak_flops == 2e11
+    assert spec.alpha_compute == spec.alpha_memory == spec.alpha_network == 0.0
+    assert spec.extra_links["pod"] == 4e8
+    assert spec.model_rel_error == 0.0
+    # and resolves through the registry loaders
+    assert load_calibrated("old_cal", str(tmp_path)).net_bw == 8e8
+    assert list_hardware(str(tmp_path))["old_cal"] == "calibrated"
+    with pytest.raises(ValueError, match="schema"):
+        spec_from_calibration({"schema": "repro.calibration/v99", "name": "x"})
+
+
+def test_calibrated_spec_carries_validation_error():
+    calib = fit_ceilings(
+        synth_suite(), BASE, name="true_box_cal",
+        validation=[Measurement(work=WorkUnit("step", 1e10, 1e9, 0.0),
+                                seconds=0.125, best_seconds=0.125,
+                                category="step")])
+    spec = calib.spec()
+    assert spec.model_rel_error == pytest.approx(
+        calib.error_summary("validation")["median_abs_rel_error"])
+    assert spec.model_rel_error > 0.0
 
 
 # --- measurement serialization ------------------------------------------------
 
 
 def test_measurement_roundtrip_and_validation():
-    m = Measurement(work=WorkUnit("x", 1.0, 2.0, 3.0), seconds=0.5,
+    m = Measurement(work=WorkUnit("x", 1.0, 2.0, 3.0, net_steps=6.0),
+                    seconds=0.5,
                     best_seconds=0.4, category="memory", rel_spread=0.1,
-                    backend="cpu", meta=(("via", "ref"),))
+                    backend="cpu", meta=(("link", "pod"), ("via", "ref")))
     assert Measurement.from_dict(m.to_dict()) == m
+    assert m.link == "pod"
+    # dicts predating net_steps (v1 registries) still round-trip
+    old = {k: v for k, v in m.to_dict().items() if k != "net_steps"}
+    assert Measurement.from_dict(old).work.net_steps == 0.0
     with pytest.raises(ValueError):
         Measurement(work=WorkUnit("x", 1.0, 2.0, 3.0), seconds=0.5,
                     category="warp")
@@ -377,7 +494,9 @@ def test_calibrate_cli_smoke(tmp_path):
     assert entry["sources"]["peak_flops"] == "measured"
     # single device in-process -> no wire to measure
     assert entry["sources"]["net_bw"] == "datasheet"
-    assert entry["validation"]["n"] == 2
+    assert entry["alpha_network"] == 0.0
+    assert entry["alpha_compute"] >= 0.0        # fitted (possibly clamped 0)
+    assert entry["validation"]["n"] == 3
     cells = sorted(os.listdir(tmp_path / "cells"))
     assert any("train_step" in c for c in cells)
     assert any(f.startswith("calibration_clx_test_cal")

@@ -22,6 +22,7 @@ def _batch_for(cfg, B=2, S=16):
     return jax.tree.map(jnp.asarray, stream.batch(0))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_forward_shapes_and_finite(arch):
     cfg = get_reduced(arch).replace(compute_dtype=jnp.float32)
@@ -37,6 +38,7 @@ def test_forward_shapes_and_finite(arch):
         assert float(metrics["ce"]) < np.log(v) * 1.5
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_one_train_step_updates_params(arch):
     cfg = get_reduced(arch).replace(compute_dtype=jnp.float32)

@@ -86,6 +86,7 @@ class TestInt8Compression:
         assert Int8Compressor(chunk=4096).wire_fraction == pytest.approx(
             0.2502, abs=1e-3)
 
+    @pytest.mark.slow
     def test_training_with_compression_still_converges(self):
         from repro.train.loop import TrainStepConfig
         from repro.optim.compression import StatelessRoundTrip

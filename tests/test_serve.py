@@ -23,6 +23,7 @@ def _params(cfg):
     return init_train_state(KEY, cfg, AdamW()).params
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", EXACT)
 def test_decode_matches_forward(arch):
     cfg = get_reduced(arch).replace(compute_dtype=jnp.float32)
@@ -39,6 +40,7 @@ def test_decode_matches_forward(arch):
                                atol=2e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_forward():
     cfg = get_reduced("whisper-tiny").replace(compute_dtype=jnp.float32)
     params = _params(cfg)
@@ -55,6 +57,7 @@ def test_whisper_decode_matches_forward():
                                atol=2e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_moe_decode_matches_forward_without_drops():
     cfg = get_reduced("qwen2-moe-a2.7b").replace(
         compute_dtype=jnp.float32, capacity_factor=16.0)
@@ -71,6 +74,7 @@ def test_moe_decode_matches_forward_without_drops():
                                atol=2e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_greedy_generate_is_deterministic_and_extends():
     cfg = get_reduced("smollm-135m").replace(compute_dtype=jnp.float32)
     params = _params(cfg)

@@ -26,6 +26,7 @@ def _run_both(B, T, H, dk, dv, chunk, normalize, seed=0):
     return y_chunk, Mf, jnp.stack(ys, 1), st_[0]
 
 
+@pytest.mark.slow
 @given(chunk=st.sampled_from([4, 8, 16, 32]), normalize=st.booleans(),
        h=st.integers(1, 3), seed=st.integers(0, 100))
 @settings(max_examples=12, deadline=None)
@@ -35,11 +36,13 @@ def test_chunked_equals_sequential(chunk, normalize, h, seed):
     np.testing.assert_allclose(M_c, M_s, atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_chunk_size_equal_to_T():
     y_c, M_c, y_s, M_s = _run_both(1, 16, 2, 4, 4, 16, True)
     np.testing.assert_allclose(y_c, y_s, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_decay_bounds_state():
     """With decay -> 0, the state forgets: y_t depends only on step t."""
     B, T, H, dk, dv = 1, 8, 1, 4, 4
@@ -56,6 +59,7 @@ def test_decay_bounds_state():
     np.testing.assert_allclose(y, want, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_indivisible_chunk_falls_back_to_divisor():
     # T=10, chunk=4 -> largest divisor <= 4 is 2; result must stay exact
     y_c, M_c, y_s, M_s = _run_both(1, 10, 1, 2, 2, 4, False)

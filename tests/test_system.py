@@ -25,6 +25,7 @@ def _setup(arch="smollm-135m", lr=3e-3, B=4, S=32):
     return cfg, opt, step, stream, state
 
 
+@pytest.mark.slow
 class TestLearning:
     def test_lm_loss_decreases(self):
         cfg, opt, step, stream, state = _setup(lr=1e-2, B=8, S=64)
@@ -59,6 +60,7 @@ class TestLearning:
         assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
 
 
+@pytest.mark.slow
 class TestFaultTolerance:
     def test_failure_mid_run_resumes_and_finishes(self, tmp_path):
         cfg, opt, step, stream, state = _setup(B=2, S=16)
