@@ -21,6 +21,9 @@ bench:           ## paper-claim checks; nonzero exit on mismatch
 calibrate-smoke: ## measure this box + fit achievable ceilings (<60s, CPU)
 	PYTHONPATH=src $(PY) -m repro.measure.calibrate --backend cpu --smoke --devices 4
 
+# The fast tier is wall-clock budgeted inside ci.sh (FAST_BUDGET_S, default
+# 75s) and reports its slowest tests via --durations=10: a test that belongs
+# in the slow tier fails CI instead of silently bloating tier-1.
 ci: 	         ## what CI runs: tests, calibration smoke, benchmarks
 	bash scripts/ci.sh
 

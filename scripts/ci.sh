@@ -1,14 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 gate + calibration smoke + paper-claim checks — what `make ci` runs.
 #   tests:      PYTHONPATH via pytest.ini (pythonpath = src .); the fast
-#               tier (-m "not slow", <60s) runs first for quick signal,
-#               then the slow end-to-end tier
+#               tier (-m "not slow", budgeted below) runs first for quick
+#               signal, then the slow end-to-end tier
+#   budget:     the fast tier must stay under FAST_BUDGET_S wall-clock
+#               seconds (default 75, ~60s of tests plus collection slack).
+#               A fast tier that creeps past the budget fails CI: mark the
+#               offending tests `slow` instead of silently bloating tier-1.
+#               `--durations=10` prints the worst offenders on every run.
 #   calibrate:  tiny-shape CPU measurement pass (<60s); refreshes
 #               artifacts/calibration so the bench below reports its errors
 #   bench:      benchmarks/run.py exits nonzero on any paper-claim mismatch
 #               and writes the BENCH_ridgeline.json perf baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+FAST_BUDGET_S=${FAST_BUDGET_S:-75}
 
 if printf '%s\n' "$@" | grep -q -- '^-m'; then
     # the caller picked their own marker expression: a second -m would
@@ -17,7 +24,16 @@ if printf '%s\n' "$@" | grep -q -- '^-m'; then
 else
     # exit code 5 = "no tests collected": fine for either tier when the
     # caller's args (a file, -k pattern) select tests only in the other one
-    python -m pytest -x -q -m "not slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
+    fast_t0=$(date +%s)
+    python -m pytest -x -q -m "not slow" --durations=10 "$@" \
+        || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
+    fast_s=$(( $(date +%s) - fast_t0 ))
+    echo "fast tier: ${fast_s}s (budget ${FAST_BUDGET_S}s)"
+    if [ "$fast_s" -gt "$FAST_BUDGET_S" ]; then
+        echo "FAST TIER OVER BUDGET: ${fast_s}s > ${FAST_BUDGET_S}s —" \
+             "mark the offenders above (see --durations) as slow" >&2
+        exit 1
+    fi
     python -m pytest -x -q -m "slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -27,8 +27,83 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 from typing import Dict, Mapping, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficiencyModel:
+    """Size-dependent achievable fraction of a peak: ``eff(q)`` in (0, 1].
+
+    The datasheet roofline prices every work unit at full PEAK; real machines
+    only reach it asymptotically — a small GEMM pays its dispatch/fill
+    overhead as a *reduced achievable rate*, not as a constant everyone-pays
+    latency (Wang et al., time-based roofline).  This is the parametric
+    saturating form the calibration fits from the sized-GEMM microbenches:
+
+        eff(q) = eff_min + (1 - eff_min) / (1 + (f_half / q) ** p)
+
+    a Hill curve in the work-unit quantity ``q`` (FLOPs for the compute
+    ceiling): ``f_half`` is the size recovering half the headroom, ``p`` the
+    sharpness, ``eff_min`` the floor as q → 0.  ``p == 1`` is exactly the
+    α–β intercept model in disguise (t = q/(peak·eff) = q/peak + f_half/peak);
+    ``p < 1`` gives the heavier small-size tail real kernel suites show.
+    With ``p ≤ 1`` (or ``eff_min > 0``) the priced time ``q/(peak·eff(q))``
+    stays monotone non-decreasing in q; ``p > 1`` with a zero floor would
+    make tinier work *slower* without bound, so the calibration fit never
+    selects it (``calibrate._EFF_P_RANGE``).
+
+    The default (``f_half == 0``) is the **identity** model ``eff ≡ 1``,
+    which reproduces the paper's constant-ceiling times bit-for-bit — every
+    datasheet preset uses it.  ``eff`` is monotone non-decreasing in q and
+    bounded in (0, 1] for q > 0 (property-tested).
+    """
+
+    f_half: float = 0.0      # quantity at half headroom; 0 => identity
+    p: float = 1.0           # Hill sharpness exponent
+    eff_min: float = 0.0     # efficiency floor as q -> 0
+
+    def __post_init__(self):
+        if self.f_half < 0 or self.p <= 0 or not 0.0 <= self.eff_min <= 1.0:
+            raise ValueError(
+                f"EfficiencyModel needs f_half >= 0, p > 0, eff_min in "
+                f"[0, 1]; got {self}")
+
+    @property
+    def is_identity(self) -> bool:
+        return self.f_half == 0.0
+
+    def eff(self, quantity: float) -> float:
+        """Achievable fraction of peak for a work unit of size ``quantity``.
+
+        Scalar and pure-math (this module stays numpy-free); the vectorized
+        twin lives in ``core/sweep`` and is property-tested against this.
+        """
+        if self.f_half <= 0.0:
+            return 1.0
+        q = float(quantity)
+        if q <= 0.0:
+            return self.eff_min
+        if math.isinf(q):
+            return 1.0
+        try:
+            ratio = (self.f_half / q) ** self.p   # -> inf for tiny q
+        except OverflowError:                     # float ** raises past 1e308
+            return self.eff_min
+        return self.eff_min + (1.0 - self.eff_min) / (1.0 + ratio)
+
+    def to_dict(self) -> Dict[str, float]:
+        return {"f_half": self.f_half, "p": self.p, "eff_min": self.eff_min}
+
+    @staticmethod
+    def from_dict(d: Optional[Mapping]) -> "EfficiencyModel":
+        """Registry JSON -> model; None/empty (pre-v3 entries) -> identity."""
+        if not d:
+            return EfficiencyModel()
+        return EfficiencyModel(f_half=float(d.get("f_half", 0.0)),
+                               p=float(d.get("p", 1.0)),
+                               eff_min=float(d.get("eff_min", 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +130,11 @@ class HardwareSpec:
       model_rel_error: median |relative error| of this spec's calibration on
         whole-step validation points (0 for datasheet presets); consumers
         like the planner widen point estimates into uncertainty bands by it.
+      compute_eff: size-dependent achievable-PEAK curve ``eff(F)`` — the
+        effective compute ceiling of an F-FLOP work unit is
+        ``peak_flops · compute_eff.eff(F)``.  Datasheet presets use the
+        identity model (``eff ≡ 1``, paper-exact); calibration can fit the
+        saturating form from sized-GEMM measurements.
       vmem_bytes: fast scratchpad capacity per core (VMEM for TPU), used by
         kernel block-shape planning, not by the Ridgeline itself.
     """
@@ -69,7 +149,12 @@ class HardwareSpec:
     alpha_network: float = 0.0
     link_alphas: Mapping[str, float] = dataclasses.field(default_factory=dict)
     model_rel_error: float = 0.0
+    compute_eff: EfficiencyModel = EfficiencyModel()
     vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB (v5e VMEM per core)
+
+    def effective_peak(self, flops: float) -> float:
+        """The achievable compute ceiling for an ``flops``-sized unit."""
+        return self.peak_flops * self.compute_eff.eff(flops)
 
     # ---- machine balance points (paper §II, Fig. 2) -------------------------
     @property
@@ -142,13 +227,15 @@ PRESETS: Dict[str, HardwareSpec] = {"tpu_v5e": TPU_V5E, "clx": CLX}
 
 # --- calibration registry -----------------------------------------------------
 
-#: JSON schema tag the calibration registry *writes* (v2: α–β fit with
-#: per-resource α terms and independently-fitted per-link bandwidths)
-CALIBRATION_SCHEMA = "repro.calibration/v2"
+#: JSON schema tag the calibration registry *writes* (v3: v2's α–β fit plus
+#: the size-dependent ``compute_eff`` achievable-PEAK curve)
+CALIBRATION_SCHEMA = "repro.calibration/v3"
 
 #: schema tags the registry *reads*; v1 entries (bandwidth-only fit, extra
-#: links scaled by the primary-NET ratio) load with all α = 0
-CALIBRATION_SCHEMAS = ("repro.calibration/v1", CALIBRATION_SCHEMA)
+#: links scaled by the primary-NET ratio) load with all α = 0, and both v1
+#: and v2 entries (which predate the efficiency model) load with ``eff ≡ 1``
+CALIBRATION_SCHEMAS = ("repro.calibration/v1", "repro.calibration/v2",
+                       CALIBRATION_SCHEMA)
 
 #: suffix convention: the calibrated twin of preset ``clx`` is ``clx_cal``
 CALIBRATED_SUFFIX = "_cal"
@@ -175,7 +262,8 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
 
     Accepts any schema in :data:`CALIBRATION_SCHEMAS`; v1 entries predate
     the α–β fit, so their α terms default to 0 (bandwidth-only behaviour is
-    preserved bit-for-bit).
+    preserved bit-for-bit), and v1/v2 entries predate the efficiency model,
+    so ``compute_eff`` defaults to the identity curve.
     """
     schema = d.get("schema")
     if schema not in CALIBRATION_SCHEMAS:
@@ -196,6 +284,7 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
         link_alphas={k: float(v)
                      for k, v in dict(d.get("link_alphas", {})).items()},
         model_rel_error=float(validation.get("median_abs_rel_error", 0.0)),
+        compute_eff=EfficiencyModel.from_dict(d.get("compute_eff")),
         vmem_bytes=int(d.get("vmem_bytes", HardwareSpec.vmem_bytes)),
     )
 

@@ -28,16 +28,25 @@ the dominant traffic by its bandwidth).
 bandwidth term (Chan et al.), and real kernels pay a dispatch overhead, so
 the resource times here are
 
-    t_C = α_C + F / PEAK          (α_C only when F > 0)
-    t_M = α_M + B_M / HBM         (α_M only when B_M > 0)
+    t_C = α_C + F / (PEAK · eff(F))   (α_C only when F > 0)
+    t_M = α_M + B_M / HBM             (α_M only when B_M > 0)
     t_N = α_N · steps + B_N / NET
 
 with the α's coming from :class:`~repro.core.hardware.HardwareSpec` and
-``steps`` (serialized network hops) from :class:`WorkUnit.net_steps`.  Every
-datasheet preset has α = 0, which recovers the paper's bandwidth-only model
-exactly — including the quadrant/argmax equivalence theorem, which holds in
-that regime.  With nonzero α the *classification* is the argmax of the
-α-aware times (the physical definition); the plane placement is unchanged.
+``steps`` (serialized network hops) from :class:`WorkUnit.net_steps`.
+
+**Size-dependent ceiling.**  ``eff(F)`` is the spec's
+:class:`~repro.core.hardware.EfficiencyModel` achievable-PEAK curve: small
+work units never reach datasheet PEAK (a 256³ GEMM runs at a third of what
+a 2048³ GEMM sustains), so the effective compute ceiling saturates with
+size instead of being a constant (Wang et al., time-based roofline).
+
+Every datasheet preset has α = 0 and the identity ``eff ≡ 1``, which
+recovers the paper's bandwidth-only model exactly — including the
+quadrant/argmax equivalence theorem, which holds in that regime.  With
+nonzero α (or a non-identity efficiency curve) the *classification* is the
+argmax of the α-aware times (the physical definition); the plane placement
+is unchanged.
 """
 from __future__ import annotations
 
@@ -168,10 +177,15 @@ def resource_times(work: WorkUnit, hw: HardwareSpec,
     calibration fit prices its measurements through it, and the vectorized
     twin in ``core/sweep`` is property-tested against it.  ``link`` names
     the network link the wire bytes rode (None = primary): its bandwidth
-    and per-hop α come from ``hw.bandwidth_for``/``hw.alpha_for``.
+    and per-hop α come from ``hw.bandwidth_for``/``hw.alpha_for``.  The
+    compute ceiling is size-dependent, ``PEAK · eff(F)``
+    (``hw.compute_eff``); the identity curve multiplies by exactly 1.0, so
+    specs without a fitted efficiency model reproduce the constant-ceiling
+    times bit-for-bit.
     """
     t_c = (hw.alpha_compute if work.flops > 0 else 0.0) + \
-        _safe_div(work.flops, hw.peak_flops)
+        _safe_div(work.flops,
+                  hw.peak_flops * hw.compute_eff.eff(work.flops))
     t_m = (hw.alpha_memory if work.mem_bytes > 0 else 0.0) + \
         _safe_div(work.mem_bytes, hw.hbm_bw)
     t_n = hw.alpha_for(link) * work.net_steps + \

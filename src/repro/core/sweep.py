@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.hardware import HardwareSpec, get_hardware
+from repro.core.hardware import EfficiencyModel, HardwareSpec, get_hardware
 from repro.core.ridgeline import Resource
 
 ArrayLike = Union[float, np.ndarray]
@@ -46,6 +46,23 @@ def _safe_div(a: np.ndarray, b: np.ndarray) -> np.ndarray:
         out = np.where(b != 0, a / np.where(b != 0, b, 1.0),
                        np.where(a > 0, np.inf, 0.0))
     return out
+
+
+def eff_grid(model: Optional[EfficiencyModel], q: ArrayLike):
+    """Vectorized twin of ``EfficiencyModel.eff`` (property-tested against
+    the scalar): achievable-fraction-of-peak on a grid of work sizes.
+
+    Returns the scalar 1.0 for the identity model so the caller's
+    ``peak * eff`` stays bit-exact with the constant-ceiling model.
+    """
+    if model is None or model.is_identity:
+        return 1.0
+    q = np.asarray(q, dtype=np.float64)
+    with np.errstate(divide="ignore", over="ignore", invalid="ignore"):
+        ratio = np.where(q > 0,
+                         (model.f_half / np.where(q > 0, q, 1.0)) ** model.p,
+                         np.inf)            # q <= 0 -> the eff_min floor
+    return model.eff_min + (1.0 - model.eff_min) / (1.0 + ratio)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +108,8 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
           net_steps: ArrayLike = 0.0,
           alpha_compute: Optional[ArrayLike] = None,
           alpha_memory: Optional[ArrayLike] = None,
-          alpha_network: Optional[ArrayLike] = None) -> SweepResult:
+          alpha_network: Optional[ArrayLike] = None,
+          compute_eff: Optional[EfficiencyModel] = None) -> SweepResult:
     """Evaluate the (α-aware) Ridgeline on a broadcast grid of work units.
 
     Machine peaks come either from ``hw`` (one spec for the whole grid; a
@@ -102,8 +120,13 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
     (serialized network hops) broadcast the same way and default from ``hw``
     (0 without one), reproducing the bandwidth-only model when all zero:
 
-        t_C = α_C·[F>0] + F/peak   t_M = α_M·[B_M>0] + B_M/hbm
+        t_C = α_C·[F>0] + F/(peak·eff(F))   t_M = α_M·[B_M>0] + B_M/hbm
         t_N = α_N·steps + B_N/net
+
+    ``compute_eff`` (defaulting from ``hw``, identity without one) is the
+    size-dependent achievable-PEAK curve: the effective compute ceiling of
+    each grid cell is ``peak · eff(F)``.  The identity curve keeps the
+    constant-ceiling times bit-for-bit.
     """
     if isinstance(hw, str):
         hw = get_hardware(hw)
@@ -117,6 +140,7 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
             else alpha_memory
         alpha_network = hw.alpha_network if alpha_network is None \
             else alpha_network
+        compute_eff = hw.compute_eff if compute_eff is None else compute_eff
     if peak_flops is None or hbm_bw is None or net_bw is None:
         raise ValueError("pass hw= or all three of peak_flops/hbm_bw/net_bw")
     alpha_compute = 0.0 if alpha_compute is None else alpha_compute
@@ -127,7 +151,8 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
         *(np.asarray(v, dtype=np.float64)
           for v in (flops, mem_bytes, net_bytes, peak_flops, hbm_bw, net_bw,
                     net_steps, alpha_compute, alpha_memory, alpha_network)))
-    t_c = np.where(f > 0, a_c, 0.0) + _safe_div(f, pk)
+    t_c = np.where(f > 0, a_c, 0.0) + _safe_div(f, pk * eff_grid(
+        compute_eff, f))
     t_m = np.where(bm > 0, a_m, 0.0) + _safe_div(bm, mb)
     t_n = a_n * ns + _safe_div(bn, nb)
     times = np.stack([t_c, t_m, t_n])       # axis 0 == RESOURCE_ORDER

@@ -43,7 +43,7 @@ work.  With α = 0 this degenerates to the paper's bandwidth-only model.
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -51,6 +51,19 @@ ArrayLike = Union[float, np.ndarray]
 
 #: supported all-reduce algorithm tags
 ALGORITHMS = ("ring", "bidir_ring", "tree")
+
+#: CLI-friendly short names accepted anywhere an algorithm tag is
+ALGORITHM_ALIASES = {"bidir": "bidir_ring"}
+
+
+def canonical_algorithm(name: str) -> str:
+    """Resolve an algorithm tag or alias; unknown names raise with options."""
+    name = ALGORITHM_ALIASES.get(name, name)
+    if name not in ALGORITHMS:
+        raise ValueError(f"unknown all-reduce algorithm {name!r}; "
+                         f"have {ALGORITHMS} (aliases "
+                         f"{sorted(ALGORITHM_ALIASES)})")
+    return name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +152,66 @@ def all_to_all(payload_bytes: ArrayLike,
 def all_reduce_bytes(payload_bytes: ArrayLike, group_size: ArrayLike,
                      algorithm: str = "ring") -> ArrayLike:
     return all_reduce(payload_bytes, group_size, algorithm).wire_bytes
+
+
+# --- algorithm selection (α–β argmin over the algorithm menu) -----------------
+
+
+def best_all_reduce(payload_bytes: float, group_size: float, bw: float,
+                    alpha: float = 0.0,
+                    algorithms: Sequence[str] = ALGORITHMS
+                    ) -> Tuple[str, CollectiveCost]:
+    """The α–β-fastest all-reduce algorithm for one payload on one link.
+
+    Scalar argmin of ``CollectiveCost.time(bw, alpha)`` over ``algorithms``
+    (Hashemi et al.: communication cost models are per-algorithm, so the
+    *choice* is part of the cost model).  With α > 0 the log-step tree wins
+    small payloads and a bandwidth-optimal ring wins large ones; with α = 0
+    the fewest-wire-bytes algorithm always wins.  Ties resolve to the
+    earlier entry of ``algorithms`` (deterministic).  ``group_size <= 1``
+    degenerates to a zero cost — a size-1 group has no collective to run,
+    so no α is paid either.
+    """
+    if not algorithms:
+        raise ValueError("need at least one algorithm to choose from")
+    best: Optional[Tuple[str, CollectiveCost, float]] = None
+    for name in algorithms:
+        algo = canonical_algorithm(name)
+        cost = all_reduce(payload_bytes, group_size, algo)
+        t = float(cost.time(bw, alpha))
+        if best is None or t < best[2]:
+            best = (algo, cost, t)
+    return best[0], best[1]
+
+
+def all_reduce_flip_payload(group_size: float, bw: float, alpha: float,
+                            algorithms: Sequence[str] = ALGORITHMS
+                            ) -> Optional[Tuple[float, str, str]]:
+    """Payload where the best all-reduce algorithm flips, if it does.
+
+    Each algorithm's time is affine in the payload,
+    ``t(p) = α·steps(n) + slope(n)·p/bw``, so the argmin along payload is a
+    lower envelope of lines: the minimum-intercept algorithm wins small
+    payloads, the minimum-slope one wins large payloads, and the flip sits
+    where their lines cross.  Returns ``(flip_payload_bytes, small_algo,
+    large_algo)``, or None when one algorithm dominates (e.g. α = 0, a
+    size-1 group, or n too small for the tree's log-step advantage).
+    """
+    n = float(group_size)
+    if n <= 1.0 or not algorithms:
+        return None
+    lines = []
+    for name in algorithms:
+        algo = canonical_algorithm(name)
+        unit = all_reduce(1.0, n, algo)              # per-payload-byte cost
+        lines.append((algo, alpha * float(unit.steps),
+                      float(unit.wire_bytes) / bw))
+    small = min(lines, key=lambda l: (l[1], l[2]))   # min intercept
+    large = min(lines, key=lambda l: (l[2], l[1]))   # min slope
+    if small[0] == large[0] or small[2] <= large[2]:
+        return None                                  # one line dominates
+    flip = (large[1] - small[1]) / (small[2] - large[2])
+    return flip, small[0], large[0]
 
 
 # --- strategy-level accounting (what feeds WorkUnit.net_bytes/net_steps) ------

@@ -17,18 +17,33 @@ the whole candidate set in one :mod:`repro.core.sweep` pass and ranks by the
 projected bound runtime.  With ``pod_size`` set, an axis whose ring extends
 past one pod is priced at the ``pod`` link's (slower) bandwidth — the
 slowest hop bounds a ring — instead of full ICI for everything, which is
-what used to rank multi-pod dp meshes too optimistically.  Everything is
-closed-form + ``jax.eval_shape`` (for exact parameter counts), so planning
-needs no accelerator and runs in seconds.
+what used to rank multi-pod dp meshes too optimistically.  A size-1 mesh
+axis has no collective at all and is skipped outright — it pays neither
+bytes nor α·steps.  Everything is closed-form + ``jax.eval_shape`` (for
+exact parameter counts), so planning needs no accelerator and runs in
+seconds.
+
+**Algorithm selection.**  The collective *algorithm* is part of the cost
+model: with a per-hop α, a log-step tree all-reduce beats rings below some
+payload and a bandwidth-optimal ring wins above it.  The default
+``"auto"`` picks the α–β argmin per mesh axis via
+``collectives.best_all_reduce`` — each candidate's dp and tp axes may
+select different algorithms (``MeshPlan.dp_algo``/``tp_algo``).  A concrete
+algorithm name prices every axis with it, and ``--algo all`` enumerates
+every algorithm as its own ranked candidate and reports the per-axis/link
+flip payloads (``flip_points``).
 
 Calibrated specs carry a ``model_rel_error`` (median |model-vs-measured|
 on whole-step validation points); each ranked plan widens its point
 estimate into the uncertainty band ``[runtime·(1−e), runtime·(1+e)]``.
+Their size-dependent ``compute_eff`` ceiling flows through the sweep
+automatically.
 
 CLI::
 
     python -m repro.launch.plan --arch dlrm-mlp --chips 16
     python -m repro.launch.plan --arch dlrm-mlp --chips 32 --pod-size 16
+    python -m repro.launch.plan --arch qwen2-7b --chips 32 --algo all
     python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
     python -m repro.launch.plan --hardware list
 
@@ -60,13 +75,17 @@ if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
 _ATTENTION_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
 
 
+#: display shorthand for algorithm tags (table column stays narrow)
+_ALGO_SHORT = {"ring": "ring", "bidir_ring": "bidir", "tree": "tree"}
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
     """One ranked candidate: the mesh, its terms, and its projection."""
 
     dp: int
     tp: int
-    algorithm: str
+    algorithm: str               # requested: a concrete tag or "auto"
     flops: float                 # per chip
     mem_bytes: float
     net_bytes: float             # wire bytes across all axes
@@ -79,6 +98,9 @@ class MeshPlan:
     net_steps: float = 0.0       # serialized hops across all axes
     dp_link: str = "ici"         # link the dp grad sync rides
     tp_link: str = "ici"         # link the tp act syncs ride
+    dp_algo: str = "ring"        # algorithm the dp grad sync uses ("-" when
+    #                              the axis is size 1: no collective runs)
+    tp_algo: str = "ring"        # algorithm the tp act syncs use
     runtime_lo: float = 0.0      # runtime·(1−e), e = hw.model_rel_error
     runtime_hi: float = 0.0      # runtime·(1+e); lo == hi == runtime when
     #                              the spec carries no measured error
@@ -90,6 +112,17 @@ class MeshPlan:
     @property
     def mesh(self) -> str:
         return f"dp{self.dp}xtp{self.tp}"
+
+    @property
+    def algo_label(self) -> str:
+        """Selected algorithms, compact: one tag when the axes agree."""
+        axes = [_ALGO_SHORT.get(a, a) for a in (self.dp_algo, self.tp_algo)
+                if a != "-"]
+        if not axes:
+            return "-"
+        if len(set(axes)) == 1:
+            return axes[0]
+        return "+".join(axes)
 
 
 def _factor_pairs(chips: int) -> List[Tuple[int, int]]:
@@ -147,15 +180,41 @@ def _axis_link(axis: int, inner: int, pod_size: Optional[int],
     return POD_LINK
 
 
+def _axis_collective(payload: float, n: int, link: Optional[str],
+                     hw: HardwareSpec, algo: str, *, scale: float = 1.0
+                     ) -> Tuple[str, "collectives.CollectiveCost"]:
+    """(selected algorithm, cost) of one mesh axis's all-reduce traffic.
+
+    ``algo == "auto"`` picks the α–β argmin for this axis's payload on the
+    link it rides.  A size-1 axis runs no collective at all: zero bytes,
+    zero hops, **zero α** — and reports its algorithm as ``"-"`` so nobody
+    mistakes a no-op for a priced ring.
+    """
+    if n <= 1:
+        return "-", collectives.CollectiveCost(0.0, 0.0).scaled(scale)
+    if algo == "auto":
+        picked, cost = collectives.best_all_reduce(
+            payload, n, hw.bandwidth_for(link), hw.alpha_for(link))
+    else:
+        picked = collectives.canonical_algorithm(algo)
+        cost = collectives.all_reduce(payload, n, picked)
+    return picked, cost.scaled(scale)
+
+
 def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
          batch: int, seq: int = 1,
-         algorithms: Sequence[str] = ("ring",),
+         algorithms: Sequence[str] = ("auto",),
          pod_size: Optional[int] = None) -> List[MeshPlan]:
     """Rank every feasible (dp, tp, algorithm) by projected step time.
 
     ``pod_size`` (chips per pod) routes each mesh axis onto the link it
     actually rides: axes contained in one pod use primary ICI, axes that
     span pods use the slower ``pod`` entry of ``hw.extra_links``.
+
+    ``algorithms`` entries are concrete collective tags (including the
+    ``bidir`` alias) or ``"auto"`` (the default): per-axis α–β argmin over
+    the full menu, so the dp grad sync and the tp act syncs can pick
+    different algorithms on the same candidate.
     """
     n_total, n_active = param_counts(cfg)
     tokens = float(batch) if cfg.family == "mlp" else float(batch) * seq
@@ -180,12 +239,15 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     net_steps = np.empty_like(dp)
     t_network = np.empty_like(dp)
     links: List[Tuple[str, str]] = []
+    algos: List[Tuple[str, str]] = []
     for i, (d, t, algo) in enumerate(cands):
-        dp_cost = collectives.dp_grad_sync(params_bytes / t, d, algo)
-        tp_cost = collectives.tp_act_sync(act_bytes[i], t, syncs,
-                                          cfg.n_layers, algo)
         dp_link = _axis_link(d, t, pod_size, hw)    # dp outer, strides tp
         tp_link = _axis_link(t, 1, pod_size, hw)    # tp inner
+        dp_algo, dp_cost = _axis_collective(params_bytes / t, d, dp_link,
+                                            hw, algo)
+        tp_algo, tp_cost = _axis_collective(act_bytes[i], t, tp_link,
+                                            hw, algo,
+                                            scale=syncs * cfg.n_layers)
         t_network[i] = (
             dp_cost.time(hw.bandwidth_for(dp_link), hw.alpha_for(dp_link))
             + tp_cost.time(hw.bandwidth_for(tp_link),
@@ -193,6 +255,7 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
         net_bytes[i] = float(dp_cost.wire_bytes) + float(tp_cost.wire_bytes)
         net_steps[i] = float(dp_cost.steps) + float(tp_cost.steps)
         links.append((dp_link or "ici", tp_link or "ici"))
+        algos.append((dp_algo, tp_algo))
     # fold per-axis α–β network time into primary-link-equivalent bytes so
     # one vectorized sweep classifies the whole candidate set consistently
     eff_net_bytes = t_network * hw.net_bw
@@ -212,6 +275,7 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
                       peak_fraction=float(res.peak_fraction[i]),
                       net_steps=float(net_steps[i]),
                       dp_link=links[i][0], tp_link=links[i][1],
+                      dp_algo=algos[i][0], tp_algo=algos[i][1],
                       runtime_lo=max(float(res.runtime[i]) * (1.0 - err),
                                      0.0),
                       runtime_hi=float(res.runtime[i]) * (1.0 + err))
@@ -219,9 +283,42 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     return sorted(plans, key=lambda p: (p.runtime, p.tp))
 
 
+def flip_points(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
+                batch: int, pod_size: Optional[int] = None) -> List[dict]:
+    """Per mesh axis/link: where the best all-reduce algorithm flips.
+
+    One row per distinct (axis kind, group size, link) among the feasible
+    meshes, with the α–β flip payload from
+    ``collectives.all_reduce_flip_payload``: the small-payload winner
+    (log-step tree once α > 0) hands over to the bandwidth-optimal ring
+    at ``flip_payload_bytes``.  ``None`` flip means one algorithm dominates
+    every payload (e.g. α = 0); size-1 axes run no collective and are
+    skipped.
+    """
+    seen = set()
+    rows: List[dict] = []
+    for d, t in feasible_meshes(cfg, chips, batch):
+        for kind, n, inner in (("dp", d, t), ("tp", t, 1)):
+            link = _axis_link(n, inner, pod_size, hw)
+            key = (kind, n, link)
+            if n <= 1 or key in seen:
+                continue
+            seen.add(key)
+            bw, alpha = hw.bandwidth_for(link), hw.alpha_for(link)
+            flip = collectives.all_reduce_flip_payload(n, bw, alpha)
+            rows.append({
+                "axis": kind, "group_size": n, "link": link or "ici",
+                "bandwidth": bw, "alpha": alpha,
+                "flip_payload_bytes": None if flip is None else flip[0],
+                "small_payload_algo": None if flip is None else flip[1],
+                "large_payload_algo": None if flip is None else flip[2],
+            })
+    return sorted(rows, key=lambda r: (r["axis"], r["group_size"]))
+
+
 def best_step_time(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
                    batch: int, seq: int = 1,
-                   algorithms: Sequence[str] = ("ring",),
+                   algorithms: Sequence[str] = ("auto",),
                    pod_size: Optional[int] = None) -> float:
     return plan(cfg, hw, chips, batch=batch, seq=seq,
                 algorithms=algorithms, pod_size=pod_size)[0].runtime
@@ -247,8 +344,8 @@ def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
             peak_memory_per_device=0.0,
             model_flops=6.0 * params_active * tokens,
             params_total=params_total, params_active=params_active,
-            tokens_per_step=tokens, variant=p.algorithm,
-            notes=f"rank by plan; {p.algorithm}; links "
+            tokens_per_step=tokens, variant=p.algo_label,
+            notes=f"rank by plan; {p.algorithm}->{p.algo_label}; links "
                   f"{p.dp_link}/{p.tp_link}")
         reports.append(rep.finalize(hw))
     return reports
@@ -271,12 +368,31 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
         link = p.dp_link if p.dp_link == p.tp_link else \
             f"{p.dp_link}/{p.tp_link}"
         lines.append(
-            f"{i + 1:>4} {p.mesh:>12} {p.algorithm:>10} "
+            f"{i + 1:>4} {p.mesh:>12} {p.algo_label:>10} "
             f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
             f"{_fmt_ms(p.t_network)} {_fmt_ms(p.runtime)} "
             + band
             + f"{link:>9} {p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
     return "\n".join(lines)
+
+
+def format_flip_table(rows: Sequence[dict]) -> str:
+    """Human-readable flip-point report (the ``--algo all`` extra)."""
+    out = ["# all-reduce algorithm flip points (per mesh axis / link)"]
+    if not rows:
+        return "\n".join(out + ["  (no multi-chip axes)"])
+    for r in rows:
+        where = (f"  {r['axis']:>3} axis n={r['group_size']:<4} "
+                 f"link={r['link']:<4} "
+                 f"(bw {r['bandwidth']:.3g} B/s, alpha {r['alpha']:.3g} s)")
+        if r["flip_payload_bytes"] is None:
+            out.append(where + ": no flip (one algorithm dominates)")
+        else:
+            out.append(
+                where + f": {r['small_payload_algo']} below "
+                f"{r['flip_payload_bytes']:.4g} B, "
+                f"{r['large_payload_algo']} above")
+    return "\n".join(out)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -297,8 +413,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--pod-size", type=int, default=None,
                     help="chips per pod; mesh axes spanning pods are priced "
                          "at the spec's 'pod' link instead of primary ICI")
-    ap.add_argument("--algo", default="ring",
-                    choices=list(collectives.ALGORITHMS) + ["all"])
+    ap.add_argument("--algo", default="auto",
+                    choices=sorted(collectives.ALGORITHM_ALIASES)
+                    + list(collectives.ALGORITHMS) + ["auto", "all"],
+                    help="collective algorithm: a concrete tag, 'auto' "
+                         "(per-axis α–β argmin, the default), or 'all' "
+                         "(rank every algorithm and report flip points)")
     ap.add_argument("--top", type=int, default=0,
                     help="show only the best N candidates (0 = all)")
     ap.add_argument("--json", action="store_true", dest="as_json",
@@ -342,6 +462,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     try:
         plans = plan(cfg, hw, args.chips, batch=batch, seq=args.seq,
                      algorithms=algos, pod_size=args.pod_size)
+        flips = flip_points(cfg, hw, args.chips, batch=batch,
+                            pod_size=args.pod_size)
     except (ValueError, KeyError) as e:
         print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
         return 2
@@ -350,13 +472,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.as_json:
         def plan_dict(p: MeshPlan) -> dict:
             return {"mesh": p.mesh, "chips": p.chips,
-                    **dataclasses.asdict(p)}
+                    "algo_label": p.algo_label, **dataclasses.asdict(p)}
 
         print(json.dumps({
             "arch": args.arch, "chips": args.chips, "batch": batch,
             "seq": None if cfg.family == "mlp" else args.seq,
             "pod_size": args.pod_size,
+            "algo": args.algo,
             "algorithms": list(algos),
+            "flip_points": flips,
             "hardware": {"source": "calibrated" if args.calibrated
                          else list_hardware().get(hw.name, "datasheet"),
                          **dataclasses.asdict(hw)},
@@ -369,6 +493,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           + ("" if cfg.family == "mlp" else f", seq={args.seq}")
           + f", algo={args.algo}")
     print(format_plan_table(shown))
+    if args.algo in ("all", "auto"):
+        print()
+        print(format_flip_table(flips))
     n_total, n_active = param_counts(cfg)
     print()
     print(roofline_table(to_cell_reports(
@@ -378,7 +505,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     band = (f" (band {best.runtime_lo * 1e3:.3f}..{best.runtime_hi * 1e3:.3f}"
             f" ms from measured_rel_error)"
             if best.runtime_hi > best.runtime else "")
-    print(f"\nbest: {best.mesh} ({best.algorithm}) -> "
+    print(f"\nbest: {best.mesh} ({best.algo_label}) -> "
           f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound{band}")
     return 0
 

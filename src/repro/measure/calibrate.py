@@ -23,7 +23,14 @@ machine actually achieves, *including latency*:
      fitted *independently* — the primary link updates
      ``net_bw``/``alpha_network`` and every other tag updates that named
      ``extra_links`` entry, so a slower ``pod``/DCI axis is measured, not
-     scaled by one NET ratio.
+     scaled by one NET ratio,
+  4. the compute group additionally tries the **size-dependent efficiency
+     ceiling** ``t ≈ F/(peak·eff(F))`` (``EfficiencyModel``, fitted from
+     the sized-GEMM benches via :func:`_fit_efficiency`); whichever of the
+     constant-intercept α–β model and the saturating curve prices the
+     compute points with less squared error wins, so machines whose small
+     GEMMs never approach PEAK get a curve and everything else keeps the
+     intercept.
 
 A resource (or link) with no measurements keeps its prior value and is
 reported as ``datasheet`` rather than ``measured`` — e.g. NET on a
@@ -32,9 +39,10 @@ single-device host where there is no wire to time.  The bottleneck
 (the ``assigned`` registry field), as the model's own view of each point.
 
 The result persists as one JSON file per spec under
-``artifacts/calibration/`` (schema ``repro.calibration/v2``; v1 entries
-still load, with α = 0); the loader side lives in ``core/hardware`` so any
-consumer can ``get_hardware(name, calibrated=True)`` without importing jax.
+``artifacts/calibration/`` (schema ``repro.calibration/v3``; v1/v2 entries
+still load — v1 with α = 0, both with the identity efficiency curve); the
+loader side lives in ``core/hardware`` so any consumer can
+``get_hardware(name, calibrated=True)`` without importing jax.
 
 CLI::
 
@@ -46,12 +54,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
+import math
 import os
 import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.hardware import (CALIBRATED_SUFFIX, CALIBRATION_SCHEMA,
-                                 HardwareSpec, calibration_dir, get_hardware)
+                                 EfficiencyModel, HardwareSpec,
+                                 calibration_dir, get_hardware)
 from repro.measure.microbench import Measurement
 
 _RESOURCES = ("peak_flops", "hbm_bw", "net_bw")
@@ -78,12 +88,13 @@ def _is_primary(link: Optional[str]) -> bool:
 
 @dataclasses.dataclass
 class _Params:
-    """Mutable fit state: the α–β parameters of one machine."""
+    """Mutable fit state: the α–β(+efficiency) parameters of one machine."""
 
     peaks: List[float]               # [peak_flops, hbm_bw, net_bw]
     alphas: List[float]              # [alpha_compute, alpha_memory, alpha_network]
     link_bws: Dict[str, float]       # extra (non-primary) link bandwidths
     link_alphas: Dict[str, float]    # per-hop α of those links
+    compute_eff: EfficiencyModel = EfficiencyModel()
 
     @staticmethod
     def from_spec(hw: HardwareSpec) -> "_Params":
@@ -92,7 +103,8 @@ class _Params:
             alphas=[hw.alpha_compute, hw.alpha_memory, hw.alpha_network],
             link_bws=dict(hw.extra_links),
             link_alphas={k: hw.link_alphas.get(k, hw.alpha_network)
-                         for k in hw.extra_links})
+                         for k in hw.extra_links},
+            compute_eff=hw.compute_eff)
 
     def spec(self) -> HardwareSpec:
         """The current fit state as a HardwareSpec (for shared pricing).
@@ -106,7 +118,8 @@ class _Params:
                 net_bw=self.peaks[2], extra_links=dict(self.link_bws),
                 alpha_compute=self.alphas[0], alpha_memory=self.alphas[1],
                 alpha_network=self.alphas[2],
-                link_alphas=dict(self.link_alphas))
+                link_alphas=dict(self.link_alphas),
+                compute_eff=self.compute_eff)
         return self._spec_cache
 
     def times(self, m: Measurement) -> Tuple[float, float, float]:
@@ -188,6 +201,81 @@ def _fit_alpha_beta(points: Sequence[Tuple[float, float, float]],
     return alpha, 1.0 / c
 
 
+#: points at/above this achieved fraction count as saturated — they anchor
+#: the peak but carry no shape information for the efficiency curve
+_EFF_SATURATED = 0.97
+
+#: fitted Hill exponents are confined to (0, 1]: below 0.1 is a noise
+#: artifact, and p > 1 with a zero floor would price time *non-monotone*
+#: in F (tinier work diverges) — p = 1 already equals the α–β intercept
+#: model, so data steeper than that falls back to the intercept fit
+_EFF_P_RANGE = (0.1, 1.0)
+
+
+def _fit_efficiency(points: Sequence[Tuple[float, float, float]]
+                    ) -> Optional[Tuple[float, EfficiencyModel]]:
+    """Fit ``t ≈ q / (peak · eff(q))`` with the Hill efficiency curve.
+
+    ``points`` are the same (u, q, t) triples the α–β fit sees; the
+    efficiency model replaces the constant intercept with a size-dependent
+    achievable ceiling (eff_min pinned at 0 — two shape parameters are all
+    four-ish GEMM sizes can support):
+
+      1. the achievable peak is the best observed rate ``max(q/t)``
+         (time-based-roofline convention), refined below;
+      2. per-point efficiencies ``e_i = (q_i/t_i)/peak`` are log-odds
+         linearized — ``ln(1/e − 1) = p·ln f_half − p·ln q`` is a straight
+         line in ln q — and (p, f_half) solved by least squares over the
+         sub-saturated points;
+      3. the peak is re-fitted by least squares with the shape held fixed
+         (``t ≈ g(q)/peak, g = q/eff(q)``), which un-biases it from step 1's
+         max-of-noisy-rates estimate.
+
+    Returns None when the data cannot support the curve: fewer than three
+    usable points, fewer than two meaningfully sub-saturated ones, or a
+    fitted exponent outside the physical range (``p ≤ 0`` would be
+    non-monotone).  The caller compares the result's squared error against
+    the α–β fit and keeps the better model.
+    """
+    pos = [(q, t) for _, q, t in points if q > 0 and t > 0]
+    if len(pos) < 3:
+        return None
+    peak = max(q / t for q, t in pos)
+    for _ in range(2):                       # shape fit <-> peak refit
+        reg = [(math.log(q), math.log(1.0 / e - 1.0))
+               for q, t in pos
+               for e in [(q / t) / peak]
+               if e < _EFF_SATURATED]
+        if len(reg) < 2:
+            return None
+        n = float(len(reg))
+        sx = sum(x for x, _ in reg)
+        sy = sum(y for _, y in reg)
+        sxx = sum(x * x for x, _ in reg)
+        sxy = sum(x * y for x, y in reg)
+        det = n * sxx - sx * sx
+        if det <= 0:
+            return None
+        p = -(n * sxy - sx * sy) / det       # slope is −p
+        if not _EFF_P_RANGE[0] <= p <= _EFF_P_RANGE[1]:
+            return None
+        # intercept = p·ln f_half  ->  f_half
+        f_half = math.exp((sy + p * sx) / (n * p))
+        model = EfficiencyModel(f_half=f_half, p=p)
+        # peak refit: t ≈ g(q)/peak with g = q/eff(q)
+        sg2 = sum((q / model.eff(q)) ** 2 for q, _ in pos)
+        sgt = sum((q / model.eff(q)) * t for q, t in pos)
+        if sg2 <= 0 or sgt <= 0:
+            return None
+        peak = sg2 / sgt
+    return peak, model
+
+
+def _sse(points: Sequence[Tuple[float, float, float]],
+         predict) -> float:
+    return sum((predict(u, q) - t) ** 2 for u, q, t in points)
+
+
 @dataclasses.dataclass(frozen=True)
 class Calibration:
     """Fitted achievable α–β parameters + the evidence behind them."""
@@ -207,6 +295,7 @@ class Calibration:
     alpha_network: float = 0.0       # s per serialized hop (primary link)
     link_bws: Dict[str, float] = dataclasses.field(default_factory=dict)
     link_alphas: Dict[str, float] = dataclasses.field(default_factory=dict)
+    compute_eff: EfficiencyModel = EfficiencyModel()   # eff(F) ceiling curve
 
     @property
     def peaks(self) -> Tuple[float, float, float]:
@@ -227,7 +316,8 @@ class Calibration:
         link_bws.update(self.link_bws)
         return _Params(peaks=list(self.peaks), alphas=list(self.alphas),
                        link_bws=link_bws,
-                       link_alphas=dict(self.link_alphas))
+                       link_alphas=dict(self.link_alphas),
+                       compute_eff=self.compute_eff)
 
     def spec(self) -> HardwareSpec:
         """The calibrated HardwareSpec.
@@ -250,6 +340,7 @@ class Calibration:
             alpha_network=self.alpha_network,
             link_alphas=dict(self.link_alphas),
             model_rel_error=summary["median_abs_rel_error"],
+            compute_eff=self.compute_eff,
             vmem_bytes=self.base.vmem_bytes,
         )
 
@@ -310,6 +401,7 @@ class Calibration:
             "alpha_compute": self.alpha_compute,
             "alpha_memory": self.alpha_memory,
             "alpha_network": self.alpha_network,
+            "compute_eff": self.compute_eff.to_dict(),
             "extra_links": dict(self.spec().extra_links),
             "link_alphas": dict(self.link_alphas),
             "vmem_bytes": self.base.vmem_bytes,
@@ -354,6 +446,13 @@ class Calibration:
                 f"  {r:>10}: {fitted:.4g} ({self.sources[r]}; datasheet "
                 f"{ds:.4g}, x{fitted / ds:.3f}) "
                 f"{a}={alpha:.3g} {unit}")
+        if not self.compute_eff.is_identity:
+            e = self.compute_eff
+            lines.append(
+                f"  compute_eff: eff(F) = "
+                f"{e.eff_min:.2g} + {1 - e.eff_min:.2g}/"
+                f"(1 + ({e.f_half:.3g}/F)^{e.p:.3g})   "
+                f"[eff(1e6)={e.eff(1e6):.2f}, eff(1e9)={e.eff(1e9):.2f}]")
         for tag in sorted(self.base.extra_links):
             bw = self.link_bws.get(tag, self.base.extra_links[tag])
             src = self.sources.get(f"link:{tag}", "datasheet")
@@ -417,13 +516,32 @@ def fit_ceilings(measurements: Sequence[Measurement],
     measured_links: set = set()
     fitted = [False, False, False]
     # compute / memory: one execution pays one α (u = 1)
+    by_resource = {}
     for r in (0, 1):
         pts = [(1.0, _quantities(m)[r], _observed(m, estimator))
                for m in measurements if groups.get(m.category) == r]
+        by_resource[r] = pts
         if pts:
             params.alphas[r], params.peaks[r] = \
                 _fit_alpha_beta(pts, params.peaks[r])
             fitted[r] = True
+    # compute only: also try the size-dependent efficiency ceiling and keep
+    # whichever model (constant intercept vs saturating curve) prices the
+    # sized-GEMM points with less squared error; ties keep α–β, so exact
+    # synthetic α–β suites — and any spec that is genuinely latency-plus-
+    # constant-ceiling — are reproduced unchanged
+    cpts = by_resource[0]
+    eff_fit = _fit_efficiency(cpts) if cpts else None
+    if eff_fit is not None:
+        peak_eff, eff_model = eff_fit
+        sse_ab = _sse(cpts, lambda u, q, a=params.alphas[0],
+                      pk=params.peaks[0]: a * u + (q / pk if pk > 0 else 0.0))
+        sse_eff = _sse(cpts, lambda u, q, pk=peak_eff, em=eff_model:
+                       q / (pk * em.eff(q)) if q > 0 else 0.0)
+        if sse_eff < sse_ab:
+            params.alphas[0] = 0.0       # the curve subsumes the intercept
+            params.peaks[0] = peak_eff
+            params.compute_eff = eff_model
     # network: α multiplies serialized hops, fitted per link tag
     by_link: Dict[Optional[str], List[Tuple[float, float, float]]] = {}
     for m in measurements:
@@ -466,6 +584,7 @@ def fit_ceilings(measurements: Sequence[Measurement],
         alpha_memory=params.alphas[1],
         alpha_network=params.alphas[2],
         link_bws=link_bws, link_alphas=link_alphas,
+        compute_eff=params.compute_eff,
     )
 
 

@@ -40,20 +40,29 @@ from repro.measure.timers import TimingStats, time_callable
 CATEGORIES = ("compute", "memory", "network", "step")
 
 #: large sizes saturate the β (bandwidth) term; the *small* entries exist to
-#: expose the α intercept the v2 fit estimates (t = α + q/peak per resource
-#: — a fit over saturating sizes alone cannot separate α from 1/peak)
-SMOKE_MATMUL_SIZES = (256, 512, 768, 1024)
-FULL_MATMUL_SIZES = (256, 512, 1024, 1536, 2048)
+#: expose the α intercept (t = α + q/peak) — and, since the efficiency-curve
+#: fit (calibrate v3), to trace out the sub-peak small-GEMM tail of
+#: ``eff(F)``: the 64³/128³ GEMMs run at a few percent of what 1024³
+#: sustains, which is exactly the curvature the Hill fit needs to see
+SMOKE_MATMUL_SIZES = (64, 128, 256, 512, 768, 1024)
+FULL_MATMUL_SIZES = (64, 128, 256, 512, 1024, 1536, 2048)
 #: streams stay well above LLC size — a sub-cache stream measures cache,
-#: not HBM, and silently poisons both the α_M intercept and the ceiling
+#: not HBM, and would silently poison the fitted ceiling
 SMOKE_STREAM_MB = (32, 64)
 FULL_STREAM_MB = (32, 64, 128, 256)
+#: ...except the KB-scale entries: their bandwidth term is negligible at
+#: *any* plausible rate (64 KB is <100 µs even at 1 GB/s), so they are
+#: pure per-execution dispatch overhead — the α_M intercept the 2-param
+#: fit needs, unidentifiable from same-decade saturating sizes alone
+SMOKE_STREAM_KB = (64,)
+FULL_STREAM_KB = (64, 256)
 SMOKE_COLLECTIVE_MB = (4, 16)
 FULL_COLLECTIVE_MB = (4, 16, 64)
 #: small-payload collectives: the per-hop α dominates these, which is what
-#: lets the network fit see latency at all (ISSUE 3 / ROADMAP α item)
-SMOKE_COLLECTIVE_KB = (64, 256)
-FULL_COLLECTIVE_KB = (64, 256, 1024)
+#: lets the network fit see latency at all (ISSUE 3 / ROADMAP α item); the
+#: 16 KB point is nearly pure latency, anchoring α against bandwidth noise
+SMOKE_COLLECTIVE_KB = (16, 64, 256)
+FULL_COLLECTIVE_KB = (16, 64, 256, 1024)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,11 +185,16 @@ def matmul_benches(sizes: Sequence[int] = SMOKE_MATMUL_SIZES, *,
 
 
 def memory_benches(sizes_mb: Sequence[int] = SMOKE_STREAM_MB, *,
+                   sizes_kb: Sequence[int] = SMOKE_STREAM_KB,
                    repeats: int = 5) -> List[Measurement]:
     """saxpy streams ``y = 2x + y``: 2 FLOP and 12 bytes per element (f32).
 
-    Arrays are sized in MiB of *total traffic* well beyond cache, so the
-    measured rate is main-memory bandwidth, not LLC.
+    The MiB entries are sized in *total traffic* well beyond cache, so the
+    measured rate is main-memory bandwidth, not LLC — they anchor the
+    fitted ceiling.  The KiB entries are latency probes: at that size the
+    transfer term vanishes and the wall time *is* the per-execution
+    dispatch overhead, which is what identifies α_M (and what a
+    whole-model step pays at least once, however small its traffic).
     """
     import jax
     import jax.numpy as jnp
@@ -190,11 +204,13 @@ def memory_benches(sizes_mb: Sequence[int] = SMOKE_STREAM_MB, *,
         return 2.0 * x + y
 
     out = []
-    for mb in sizes_mb:
-        n = mb * 1024 * 1024 // 4          # f32 elements per operand
+    sizes = [(kb * 1024, f"saxpy_{kb}kb") for kb in sizes_kb]
+    sizes += [(mb * 1024 * 1024, f"saxpy_{mb}mb") for mb in sizes_mb]
+    for nbytes, name in sizes:
+        n = max(1, nbytes // 4)            # f32 elements per operand
         x = jnp.ones((n,), jnp.float32)
         y = jnp.full((n,), 0.5, jnp.float32)
-        work = WorkUnit(f"saxpy_{mb}mb",
+        work = WorkUnit(name,
                         flops=2.0 * n,
                         mem_bytes=3.0 * n * 4,   # read x, read y, write out
                         net_bytes=0.0)
@@ -417,6 +433,8 @@ def default_suite(*, smoke: bool = True, repeats: Optional[int] = None,
         out += matmul_benches(
             SMOKE_MATMUL_SIZES if smoke else FULL_MATMUL_SIZES, repeats=r)
         out += memory_benches(SMOKE_STREAM_MB if smoke else FULL_STREAM_MB,
+                              sizes_kb=(SMOKE_STREAM_KB if smoke
+                                        else FULL_STREAM_KB),
                               repeats=r)
         out += collective_benches(
             SMOKE_COLLECTIVE_MB if smoke else FULL_COLLECTIVE_MB,

@@ -50,14 +50,24 @@ def _fmt(seconds: float) -> str:
 def point_notes(calib: Calibration,
                 measurements: Optional[Sequence[Measurement]] = None
                 ) -> Dict[str, str]:
-    """name -> 'meas … vs model … (±err%)' annotations for the plotters."""
+    """name -> 'meas … vs model … (±err%)' annotations for the plotters.
+
+    When the calibration fitted a size-dependent efficiency curve, each
+    point also carries its achievable-PEAK fraction ``eff(F)`` — the
+    figure then shows *why* the small points sit under the ceiling.
+    """
     ms = measurements if measurements is not None else (
         calib.fit_measurements + calib.validation_measurements)
-    return {
-        m.work.name:
-        f"meas {_fmt(calib.observed_seconds(m))} vs model "
-        f"{_fmt(calib.model_seconds(m))} ({calib.rel_error(m):+.0%})"
-        for m in ms}
+    eff = calib.compute_eff
+
+    def note(m: Measurement) -> str:
+        s = (f"meas {_fmt(calib.observed_seconds(m))} vs model "
+             f"{_fmt(calib.model_seconds(m))} ({calib.rel_error(m):+.0%})")
+        if not eff.is_identity and m.work.flops > 0:
+            s += f" eff {eff.eff(m.work.flops):.0%}"
+        return s
+
+    return {m.work.name: note(m) for m in ms}
 
 
 def measured_table(reports: Sequence[CellReport]) -> str:
