@@ -136,11 +136,56 @@ def main() -> int:
     # step time must be monotone non-increasing in chip count (ISSUE #1)
     ok &= plans[0].runtime < max(p.runtime for p in plans if p.tp == 1)
     clx = get_hardware("clx")
-    scaling, us = _timed(lambda: [plan_mod.best_step_time(
-        cfg_mlp, clx, n, batch=4096) for n in (1, 2, 4, 8, 16, 32, 64)])
+    # the scaling curve is one vectorized grid pass now (ISSUE 5), not N
+    # separate plan() calls — same monotonicity claim, fraction of the time
+    from repro.launch import plan_grid as grid_mod
+    chips_scaling = (1, 2, 4, 8, 16, 32, 64)
+    sgrid, us = _timed(grid_mod.plan_grid, cfg_mlp, clx, chips_scaling,
+                       [4096])
+    scaling = sgrid.best_runtime_grid()[:, 0]
     rows.append(("planner_scaling_clx", us,
                  "ms=" + "/".join(f"{t * 1e3:.1f}" for t in scaling)))
     ok &= all(b <= a * (1 + 1e-9) for a, b in zip(scaling, scaling[1:]))
+
+    # grid-scale planner: (dp × tp × pp) × microbatch × batch × chips in
+    # broadcast passes; acceptance pins ≥ 1e5 candidates/s and ≥ 10× over
+    # looping today's plan() per grid point (tests/test_plan_grid.py)
+    chips_grid, batch_grid, max_pp = (4, 8, 16, 32, 64), \
+        (256, 512, 1024, 2048, 4096), 8
+    # the warm-up pass (allocator + enumeration caches) doubles as the
+    # result grid; only the repeats below are timed
+    ggrid = grid_mod.plan_grid(cfg_mlp, clx, chips_grid, batch_grid,
+                               max_pp=max_pp)
+
+    def _best_of(k, fn):
+        best = float("inf")
+        for _ in range(k):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    grid_s = _best_of(3, lambda: grid_mod.plan_grid(
+        cfg_mlp, clx, chips_grid, batch_grid, max_pp=max_pp))
+    loop_s = _best_of(3, lambda: [
+        plan_mod.plan(cfg_mlp, clx, c, batch=b, max_pp=max_pp)
+        for c in chips_grid for b in batch_grid])
+    cands_per_s = ggrid.n_candidates / grid_s
+    speedup = loop_s / grid_s
+    planner_grid = {
+        "chips_grid": list(chips_grid), "batch_grid": list(batch_grid),
+        "max_pp": max_pp, "n_candidates": ggrid.n_candidates,
+        "grid_ms": grid_s * 1e3, "loop_ms": loop_s * 1e3,
+        "candidates_per_s": cands_per_s,
+        "speedup_vs_plan_loop": speedup,
+    }
+    rows.append(("planner_grid_candidates_per_s", grid_s * 1e6,
+                 f"candidates={ggrid.n_candidates};"
+                 f"per_s={cands_per_s:.3g}"))
+    rows.append(("planner_grid_speedup_vs_loop", loop_s * 1e6,
+                 f"grid_ms={grid_s * 1e3:.2f};loop_ms={loop_s * 1e3:.2f};"
+                 f"speedup={speedup:.1f}x"))
+    ok &= cands_per_s >= 1e5 and speedup >= 10.0
 
     # algorithm selection: with any per-hop latency the log-step tree must
     # win small payloads and a bandwidth-optimal ring large ones, with the
@@ -188,7 +233,10 @@ def main() -> int:
     # --- micro: core model + kernels ---------------------------------------------
     from repro.core import CLX, WorkUnit, analyze
     w = WorkUnit("probe", 1e12, 1e9, 1e8)
-    _, us = _timed(lambda: [analyze(w, CLX) for _ in range(1000)])
+    # min-of-3: a single pass here mostly measures GC pauses against the
+    # live jax heap, not the (µs-scale) model
+    us = min(_timed(lambda: [analyze(w, CLX) for _ in range(1000)])[1]
+             for _ in range(3))
     rows.append(("ridgeline_analyze_x1000", us, "core-model-throughput"))
 
     cells_per_s, us = _timed(_sweep_throughput)
@@ -227,6 +275,7 @@ def main() -> int:
         json.dump({
             "schema": "repro.bench/v1",
             "sweep_cells_per_s": cells_per_s,
+            "planner_grid": planner_grid,
             "calibration": calibration,
             "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                      for n, us, d in rows],

@@ -7,7 +7,10 @@ chip budget?" — all answered analytically (no accelerator, no jax tracing):
      v5e chips, per collective algorithm;
   2. sweep the batch axis against the best mesh to find where the step
      leaves the network region (the paper's Fig. 6 question, generalized);
-  3. scaling curve: best projected step time vs chip count.
+  3. scaling curve: best projected step time vs chip count — one
+     vectorized ``plan_grid`` pass instead of N ``plan()`` calls;
+  4. the pipeline axis: the chips × batch surface with pp ≤ 8 stages and
+     1F1B microbatching, still a single broadcast pass.
 
     PYTHONPATH=src python examples/plan_demo.py
 """
@@ -17,8 +20,8 @@ from repro.configs import get_config
 from repro.core import sweep as sweep_mod
 from repro.core.hardware import get_hardware
 from repro.distributed import collectives
-from repro.launch.plan import (best_step_time, format_plan_table,
-                               param_counts, plan)
+from repro.launch.plan import (format_plan_table, param_counts, plan,
+                               plan_grid)
 
 
 def main():
@@ -51,13 +54,28 @@ def main():
         print(f"  {frm} -> {to} between batch {batches[idx - 1]} "
               f"and {batches[idx]}")
 
-    # 3. scaling curve
-    print("\n== best projected step time vs chips ==")
-    floor = best_step_time(cfg, hw, 128, batch=4096)
-    for n in (1, 2, 4, 8, 16, 32, 64, 128):
-        t = best_step_time(cfg, hw, n, batch=4096)
+    # 3. scaling curve — one vectorized grid pass, not N plan() calls
+    print("\n== best projected step time vs chips (one plan_grid pass) ==")
+    chips_axis = (1, 2, 4, 8, 16, 32, 64, 128)
+    grid = plan_grid(cfg, hw, chips_axis, [4096])
+    curve = grid.best_runtime_grid()[:, 0]
+    floor = curve[-1]
+    for n, t in zip(chips_axis, curve):
         print(f"  {n:>4} chips: {t * 1e3:9.3f} ms  "
               + "#" * max(1, int(t / floor)))
+
+    # 4. open the pipeline axis: chips × batch surface with pp up to 8
+    #    stages and 1F1B microbatching, still one broadcast pass
+    print("\n== chips x batch surface with --pp 8 (best mesh per point) ==")
+    surface = plan_grid(cfg, clx, (8, 16, 32, 64), (256, 1024, 4096),
+                        max_pp=8)
+    print(f"  {surface.n_candidates} candidates in one pass")
+    for c in surface.chips_list:
+        for b in surface.batch_list:
+            p = surface.best(c, b)
+            print(f"  {c:>3} chips, batch {b:>5}: {p.mesh:>14} "
+                  f"m={p.microbatches:<4} {p.runtime * 1e3:8.3f} ms "
+                  f"({p.bottleneck})")
 
 
 if __name__ == "__main__":

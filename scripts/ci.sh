@@ -11,7 +11,9 @@
 #   calibrate:  tiny-shape CPU measurement pass (<60s); refreshes
 #               artifacts/calibration so the bench below reports its errors
 #   bench:      benchmarks/run.py exits nonzero on any paper-claim mismatch
-#               and writes the BENCH_ridgeline.json perf baseline
+#               and writes the BENCH_ridgeline.json perf baseline (incl.
+#               the grid-planner candidates/s + speedup rows that
+#               tests/test_plan_grid.py regression-pins on the next run)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

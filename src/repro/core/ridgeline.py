@@ -193,6 +193,18 @@ def resource_times(work: WorkUnit, hw: HardwareSpec,
     return t_c, t_m, t_n
 
 
+def _classify_times(t_c: float, t_m: float, t_n: float) -> Resource:
+    """Argmax of three precomputed times, COMPUTE > MEMORY > NETWORK ties.
+
+    Branch-only (no dict/list/Enum construction per call): ``analyze`` sits
+    on the planner/calibration hot path, and building the times mapping and
+    priority list per classification dominated its profile.
+    """
+    if t_c >= t_m:
+        return Resource.COMPUTE if t_c >= t_n else Resource.NETWORK
+    return Resource.MEMORY if t_m >= t_n else Resource.NETWORK
+
+
 def classify_by_times(work: WorkUnit, hw: HardwareSpec) -> Resource:
     """Bottleneck as argmax of the α-aware times (the physical definition).
 
@@ -200,16 +212,11 @@ def classify_by_times(work: WorkUnit, hw: HardwareSpec) -> Resource:
     (the checked theorem); with α > 0 this is the ground truth and the
     quadrant construction remains the bandwidth-only plane picture.
     """
-    t_c, t_m, t_n = resource_times(work, hw)
-    times = {Resource.COMPUTE: t_c, Resource.MEMORY: t_m,
-             Resource.NETWORK: t_n}
-    # tie-break in the same COMPUTE > MEMORY > NETWORK priority order
-    order = [Resource.COMPUTE, Resource.MEMORY, Resource.NETWORK]
-    best = max(order, key=lambda r: (times[r], -order.index(r)))
-    return best
+    return _classify_times(*resource_times(work, hw))
 
 
 def analyze(work: WorkUnit, hw: HardwareSpec) -> RidgelineAnalysis:
+    # one resource_times computation feeds times, bound, and classification
     t_c, t_m, t_n = resource_times(work, hw)
     runtime = max(t_c, t_m, t_n)
     attained = _safe_div(work.flops, runtime) if runtime > 0 else 0.0
@@ -219,7 +226,7 @@ def analyze(work: WorkUnit, hw: HardwareSpec) -> RidgelineAnalysis:
         t_compute=t_c,
         t_memory=t_m,
         t_network=t_n,
-        bottleneck=classify_by_times(work, hw),
+        bottleneck=_classify_times(t_c, t_m, t_n),
         runtime=runtime,
         attained_flops=attained,
         peak_fraction=_safe_div(attained, hw.peak_flops),

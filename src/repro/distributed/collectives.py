@@ -184,6 +184,55 @@ def best_all_reduce(payload_bytes: float, group_size: float, bw: float,
     return best[0], best[1]
 
 
+def best_all_reduce_grid(payload_bytes: ArrayLike, group_size: ArrayLike,
+                         bw: ArrayLike, alpha: ArrayLike = 0.0,
+                         algorithms: Sequence[str] = ALGORITHMS,
+                         allowed: Optional[np.ndarray] = None,
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized α–β argmin over the algorithm menu, elementwise.
+
+    The grid twin of :func:`best_all_reduce`: every argument broadcasts
+    against every other, so a whole planner candidate set — each element
+    its own payload, group size, *and link* (per-element ``bw``/``alpha``)
+    — selects in one pass.  Returns ``(wire_bytes, steps, algo_idx)``
+    arrays of the broadcast shape, with ``algo_idx`` indexing into
+    ``algorithms`` (canonicalized).  Ties resolve to the earliest menu
+    entry, matching the scalar's strict-less-than scan bit-for-bit
+    (property-tested in ``tests/test_plan_grid.py``).
+
+    ``allowed`` optionally masks the menu per element — shape
+    ``(len(algorithms), *broadcast_shape)`` of booleans — so a candidate
+    set can mix "auto" rows (all True) with fixed-algorithm rows (one
+    True) in the same pass; a disallowed entry prices at +inf and is
+    never selected, and a column with no allowed entry at all raises
+    (there is nothing valid to return for it).
+    """
+    if not algorithms:
+        raise ValueError("need at least one algorithm to choose from")
+    p = np.asarray(payload_bytes, dtype=np.float64)
+    n = np.asarray(group_size, dtype=np.float64)
+    bw = np.asarray(bw, dtype=np.float64)
+    alpha = np.asarray(alpha, dtype=np.float64)
+    shape = np.broadcast_shapes(p.shape, n.shape, bw.shape, alpha.shape)
+    wire = np.empty((len(algorithms),) + shape, dtype=np.float64)
+    steps = np.empty_like(wire)
+    for a, name in enumerate(algorithms):
+        cost = all_reduce(p, n, canonical_algorithm(name))
+        wire[a] = np.broadcast_to(cost.wire_bytes, shape)
+        steps[a] = np.broadcast_to(cost.steps, shape)
+    times = alpha * steps + wire / bw          # same expression as .time()
+    if allowed is not None:
+        if not np.all(np.any(allowed, axis=0)):
+            raise ValueError(
+                "allowed mask excludes every algorithm for at least one "
+                "element; each column needs one True entry")
+        times = np.where(allowed, times, np.inf)
+    idx = times.argmin(axis=0)                 # first minimum == menu order
+    sel = np.expand_dims(idx, 0)
+    return (np.take_along_axis(wire, sel, 0)[0],
+            np.take_along_axis(steps, sel, 0)[0], idx)
+
+
 def all_reduce_flip_payload(group_size: float, bw: float, alpha: float,
                             algorithms: Sequence[str] = ALGORITHMS
                             ) -> Optional[Tuple[float, str, str]]:

@@ -1,33 +1,38 @@
-"""Parallelism planner: rank (dp, tp) meshes by Ridgeline-projected step time.
+"""Parallelism planner: rank (dp, tp, pp) meshes by Ridgeline step time.
 
-``plan(cfg, hw, chips, ...)`` enumerates every feasible ``dp × tp``
-factorization of the chip budget, derives each candidate's per-chip
-Ridgeline terms analytically —
+``plan(cfg, hw, chips, ...)`` is a thin slice of the grid-scale vectorized
+engine in :mod:`repro.launch.plan_grid` — one chips budget, one global
+batch — kept as the ergonomic scalar API.  The engine enumerates every
+feasible ``dp × tp × pp`` factorization (pp | n_layers) crossed with every
+1F1B microbatch count (m | batch/dp) and collective algorithm, and derives
+each candidate's per-chip Ridgeline terms analytically —
 
-  F    = 6 · N_active · tokens / (dp·tp)
-  B_M  = params_bytes/tp  +  2 · L · boundary_act_bytes      (weights + acts)
-  t_N  = DP grad all-reduce (params_bytes/tp over dp)
-         + TP activation all-reduces (2×/layer MLP, 4×/layer attention),
-         each priced α–β on the *link its mesh axis rides*:
-         α(link)·steps + bytes/bandwidth(link)
+  F    = 6 · N_active · tokens / (dp·tp·pp)
+  B_M  = params_bytes/(tp·pp) + 2 · (L/pp) · boundary_act_bytes   (per µbatch)
+  t_N  = DP grad all-reduce (params_bytes/(tp·pp) over dp, once per step)
+         + bubble · [ TP activation all-reduces (2×/layer MLP, 4×/layer
+           attention, per stage per microbatch) + PP boundary p2p
+           (2 hops · act_bytes/m) ],  each priced α–β on the *link its
+           mesh axis rides*:  α(link)·steps + bytes/bandwidth(link)
 
-— with collective wire bytes and hop counts coming from
-``repro.distributed.collectives`` under the chosen algorithm, then evaluates
-the whole candidate set in one :mod:`repro.core.sweep` pass and ranks by the
-projected bound runtime.  With ``pod_size`` set, an axis whose ring extends
+— where ``bubble = (m + pp − 1)/m`` is the 1F1B pipeline-fill factor
+(exactly 1 at pp = 1, recovering the non-pipelined model bit-for-bit).
+Collective wire bytes and hop counts come from
+``repro.distributed.collectives`` under the chosen algorithm, and the whole
+candidate set is evaluated in one :mod:`repro.core.sweep` broadcast pass —
+there is no per-candidate Python loop; grids of ≥10⁵ candidates/s are one
+call (``plan_grid``).  With ``pod_size`` set, an axis whose ring extends
 past one pod is priced at the ``pod`` link's (slower) bandwidth — the
-slowest hop bounds a ring — instead of full ICI for everything, which is
-what used to rank multi-pod dp meshes too optimistically.  A size-1 mesh
-axis has no collective at all and is skipped outright — it pays neither
-bytes nor α·steps.  Everything is closed-form + ``jax.eval_shape`` (for
-exact parameter counts), so planning needs no accelerator and runs in
-seconds.
+slowest hop bounds a ring.  A size-1 mesh axis has no collective at all and
+pays neither bytes nor α·steps.  Everything is closed-form +
+``jax.eval_shape`` (for exact parameter counts, memoized per config), so
+planning needs no accelerator and runs in milliseconds.
 
 **Algorithm selection.**  The collective *algorithm* is part of the cost
 model: with a per-hop α, a log-step tree all-reduce beats rings below some
 payload and a bandwidth-optimal ring wins above it.  The default
 ``"auto"`` picks the α–β argmin per mesh axis via
-``collectives.best_all_reduce`` — each candidate's dp and tp axes may
+``collectives.best_all_reduce_grid`` — each candidate's dp and tp axes may
 select different algorithms (``MeshPlan.dp_algo``/``tp_algo``).  A concrete
 algorithm name prices every axis with it, and ``--algo all`` enumerates
 every algorithm as its own ranked candidate and reports the per-axis/link
@@ -44,9 +49,15 @@ CLI::
     python -m repro.launch.plan --arch dlrm-mlp --chips 16
     python -m repro.launch.plan --arch dlrm-mlp --chips 32 --pod-size 16
     python -m repro.launch.plan --arch qwen2-7b --chips 32 --algo all
+    python -m repro.launch.plan --arch qwen2-7b --chips 64 --pp 8
+    python -m repro.launch.plan --arch dlrm-mlp --chips-grid 8,16,32,64 \\
+        --batch-grid 256,512,1024 --pp 4
     python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
     python -m repro.launch.plan --hardware list
 
+``--pp N`` admits pipeline axes up to N stages; ``--chips-grid`` /
+``--batch-grid`` (comma lists) switch to grid mode: the whole scaling
+surface in one vectorized pass, one best-plan row per grid point.
 ``--hardware`` accepts any name from ``core.hardware.list_hardware()``
 (datasheet presets and calibrated registry entries alike; ``list`` prints
 them); ``--calibrated`` swaps in the measured twin of the named preset, so
@@ -61,118 +72,34 @@ import json
 import sys
 from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core import sweep as sweep_mod
 from repro.core.hardware import HardwareSpec, get_hardware, list_hardware
 from repro.core.report import CellReport, roofline_table
 from repro.distributed import collectives
+# the evaluation core + its vocabulary (re-exported: this module is the
+# stable import surface; the engine lives in plan_grid)
+from repro.launch.plan_grid import (MeshPlan, PlanGrid, POD_LINK,
+                                    feasible_meshes, param_counts,
+                                    plan_grid)
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
 
-#: families with attention/MoE blocks -> Megatron-style 4 syncs per layer
-_ATTENTION_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
-
-
-#: display shorthand for algorithm tags (table column stays narrow)
-_ALGO_SHORT = {"ring": "ring", "bidir_ring": "bidir", "tree": "tree"}
-
-
-@dataclasses.dataclass(frozen=True)
-class MeshPlan:
-    """One ranked candidate: the mesh, its terms, and its projection."""
-
-    dp: int
-    tp: int
-    algorithm: str               # requested: a concrete tag or "auto"
-    flops: float                 # per chip
-    mem_bytes: float
-    net_bytes: float             # wire bytes across all axes
-    t_compute: float
-    t_memory: float
-    t_network: float             # α–β time, per-axis links
-    runtime: float               # projected step time (bound)
-    bottleneck: str
-    peak_fraction: float
-    net_steps: float = 0.0       # serialized hops across all axes
-    dp_link: str = "ici"         # link the dp grad sync rides
-    tp_link: str = "ici"         # link the tp act syncs ride
-    dp_algo: str = "ring"        # algorithm the dp grad sync uses ("-" when
-    #                              the axis is size 1: no collective runs)
-    tp_algo: str = "ring"        # algorithm the tp act syncs use
-    runtime_lo: float = 0.0      # runtime·(1−e), e = hw.model_rel_error
-    runtime_hi: float = 0.0      # runtime·(1+e); lo == hi == runtime when
-    #                              the spec carries no measured error
-
-    @property
-    def chips(self) -> int:
-        return self.dp * self.tp
-
-    @property
-    def mesh(self) -> str:
-        return f"dp{self.dp}xtp{self.tp}"
-
-    @property
-    def algo_label(self) -> str:
-        """Selected algorithms, compact: one tag when the axes agree."""
-        axes = [_ALGO_SHORT.get(a, a) for a in (self.dp_algo, self.tp_algo)
-                if a != "-"]
-        if not axes:
-            return "-"
-        if len(set(axes)) == 1:
-            return axes[0]
-        return "+".join(axes)
-
-
-def _factor_pairs(chips: int) -> List[Tuple[int, int]]:
-    return [(chips // t, t) for t in range(1, chips + 1) if chips % t == 0]
-
-
-def _model_width(cfg: ModelConfig) -> int:
-    return cfg.mlp_widths[0] if cfg.family == "mlp" else cfg.d_model
-
-
-def feasible_meshes(cfg: ModelConfig, chips: int,
-                    batch: int) -> List[Tuple[int, int]]:
-    """(dp, tp) with dp·tp == chips, dp | batch and tp | model width."""
-    width = _model_width(cfg)
-    return [(dp, tp) for dp, tp in _factor_pairs(chips)
-            if batch % dp == 0 and width % tp == 0]
-
-
-def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
-    """(total, active) parameter counts; closed-form for the MLP family.
-
-    The MLP tower is counted without jax so the planner CLI stays fast on a
-    bare CPU box; every other family defers to the eval_shape-exact
-    accounting in ``launch/specs``.
-    """
-    if cfg.family == "mlp":
-        widths = cfg.mlp_widths
-        n = 0.0
-        for i, w in enumerate(widths):
-            d_in = widths[i - 1] if i else widths[0]
-            n += d_in * w + w
-        n += widths[-1] * 1 + 1                     # head
-        return n, n
-    from repro.launch.specs import param_counts as exact
-    return exact(cfg)
-
-
-#: mesh-axis tag of the inter-pod link in ``HardwareSpec.extra_links``
-POD_LINK = "pod"
+__all__ = ["MeshPlan", "PlanGrid", "plan", "plan_grid", "best_step_time",
+           "feasible_meshes", "param_counts", "flip_points",
+           "format_plan_table", "format_grid_table", "format_flip_table",
+           "to_cell_reports", "main"]
 
 
 def _axis_link(axis: int, inner: int, pod_size: Optional[int],
                hw: HardwareSpec) -> Optional[str]:
     """Link a ring over ``axis`` chips (stride ``inner``) is priced at.
 
-    The mesh is laid out tp-inner / dp-outer.  A ring whose extent
-    ``axis·inner`` exceeds the pod crosses a pod boundary somewhere, and a
-    ring runs at its slowest hop — so the whole axis is priced at the
-    ``pod`` link.  Returns None (primary link) for intra-pod axes, trivial
-    axes, or when no ``pod_size`` is given.
+    Scalar twin of the engine's boolean-mask routing, kept for the
+    flip-point report: a ring whose extent ``axis·inner`` exceeds the pod
+    crosses a pod boundary somewhere, and a ring runs at its slowest hop —
+    so the whole axis is priced at the ``pod`` link.  Returns None
+    (primary link) for intra-pod axes, trivial axes, or when no
+    ``pod_size`` is given.
     """
     if pod_size is None or axis <= 1 or axis * inner <= pod_size:
         return None
@@ -180,32 +107,15 @@ def _axis_link(axis: int, inner: int, pod_size: Optional[int],
     return POD_LINK
 
 
-def _axis_collective(payload: float, n: int, link: Optional[str],
-                     hw: HardwareSpec, algo: str, *, scale: float = 1.0
-                     ) -> Tuple[str, "collectives.CollectiveCost"]:
-    """(selected algorithm, cost) of one mesh axis's all-reduce traffic.
-
-    ``algo == "auto"`` picks the α–β argmin for this axis's payload on the
-    link it rides.  A size-1 axis runs no collective at all: zero bytes,
-    zero hops, **zero α** — and reports its algorithm as ``"-"`` so nobody
-    mistakes a no-op for a priced ring.
-    """
-    if n <= 1:
-        return "-", collectives.CollectiveCost(0.0, 0.0).scaled(scale)
-    if algo == "auto":
-        picked, cost = collectives.best_all_reduce(
-            payload, n, hw.bandwidth_for(link), hw.alpha_for(link))
-    else:
-        picked = collectives.canonical_algorithm(algo)
-        cost = collectives.all_reduce(payload, n, picked)
-    return picked, cost.scaled(scale)
-
-
 def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
          batch: int, seq: int = 1,
          algorithms: Sequence[str] = ("auto",),
-         pod_size: Optional[int] = None) -> List[MeshPlan]:
-    """Rank every feasible (dp, tp, algorithm) by projected step time.
+         pod_size: Optional[int] = None,
+         max_pp: int = 1) -> List[MeshPlan]:
+    """Rank every feasible (dp, tp, pp, m, algorithm) by projected step time.
+
+    A single-point slice of :func:`repro.launch.plan_grid.plan_grid` (one
+    chips budget, one batch) — same evaluation core, same numbers.
 
     ``pod_size`` (chips per pod) routes each mesh axis onto the link it
     actually rides: axes contained in one pod use primary ICI, axes that
@@ -214,73 +124,13 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     ``algorithms`` entries are concrete collective tags (including the
     ``bidir`` alias) or ``"auto"`` (the default): per-axis α–β argmin over
     the full menu, so the dp grad sync and the tp act syncs can pick
-    different algorithms on the same candidate.
+    different algorithms on the same candidate.  ``max_pp`` admits
+    pipeline-parallel axes up to that many stages (1 = the classic
+    dp × tp space).
     """
-    n_total, n_active = param_counts(cfg)
-    tokens = float(batch) if cfg.family == "mlp" else float(batch) * seq
-    width = _model_width(cfg)
-    act_dtype = 4 if cfg.family == "mlp" else 2     # fp32 MLP, bf16 LMs
-    syncs = 4.0 if cfg.family in _ATTENTION_FAMILIES else 2.0
-    params_bytes = n_total * 4.0                    # fp32 master weights
-
-    meshes = feasible_meshes(cfg, chips, batch)
-    if not meshes:
-        raise ValueError(
-            f"no feasible (dp, tp) for chips={chips}, batch={batch}, "
-            f"width={width}")
-    cands = [(dp, tp, algo) for dp, tp in meshes for algo in algorithms]
-    dp = np.array([c[0] for c in cands], dtype=np.float64)
-    tp = np.array([c[1] for c in cands], dtype=np.float64)
-
-    flops = 6.0 * n_active * tokens / (dp * tp)
-    act_bytes = (tokens / dp) * width * act_dtype   # one boundary activation
-    mem_bytes = params_bytes / tp + 2.0 * cfg.n_layers * act_bytes
-    net_bytes = np.empty_like(dp)
-    net_steps = np.empty_like(dp)
-    t_network = np.empty_like(dp)
-    links: List[Tuple[str, str]] = []
-    algos: List[Tuple[str, str]] = []
-    for i, (d, t, algo) in enumerate(cands):
-        dp_link = _axis_link(d, t, pod_size, hw)    # dp outer, strides tp
-        tp_link = _axis_link(t, 1, pod_size, hw)    # tp inner
-        dp_algo, dp_cost = _axis_collective(params_bytes / t, d, dp_link,
-                                            hw, algo)
-        tp_algo, tp_cost = _axis_collective(act_bytes[i], t, tp_link,
-                                            hw, algo,
-                                            scale=syncs * cfg.n_layers)
-        t_network[i] = (
-            dp_cost.time(hw.bandwidth_for(dp_link), hw.alpha_for(dp_link))
-            + tp_cost.time(hw.bandwidth_for(tp_link),
-                           hw.alpha_for(tp_link)))
-        net_bytes[i] = float(dp_cost.wire_bytes) + float(tp_cost.wire_bytes)
-        net_steps[i] = float(dp_cost.steps) + float(tp_cost.steps)
-        links.append((dp_link or "ici", tp_link or "ici"))
-        algos.append((dp_algo, tp_algo))
-    # fold per-axis α–β network time into primary-link-equivalent bytes so
-    # one vectorized sweep classifies the whole candidate set consistently
-    eff_net_bytes = t_network * hw.net_bw
-    res = sweep_mod.sweep(flops, mem_bytes, eff_net_bytes, hw, net_steps=0.0)
-    labels = res.labels()
-
-    err = max(float(hw.model_rel_error), 0.0)
-    plans = [MeshPlan(dp=c[0], tp=c[1], algorithm=c[2],
-                      flops=float(res.flops[i]),
-                      mem_bytes=float(res.mem_bytes[i]),
-                      net_bytes=float(net_bytes[i]),
-                      t_compute=float(res.t_compute[i]),
-                      t_memory=float(res.t_memory[i]),
-                      t_network=float(res.t_network[i]),
-                      runtime=float(res.runtime[i]),
-                      bottleneck=str(labels[i]),
-                      peak_fraction=float(res.peak_fraction[i]),
-                      net_steps=float(net_steps[i]),
-                      dp_link=links[i][0], tp_link=links[i][1],
-                      dp_algo=algos[i][0], tp_algo=algos[i][1],
-                      runtime_lo=max(float(res.runtime[i]) * (1.0 - err),
-                                     0.0),
-                      runtime_hi=float(res.runtime[i]) * (1.0 + err))
-             for i, c in enumerate(cands)]
-    return sorted(plans, key=lambda p: (p.runtime, p.tp))
+    grid = plan_grid(cfg, hw, [chips], [batch], seq=seq,
+                     algorithms=algorithms, pod_size=pod_size, max_pp=max_pp)
+    return grid.plans()
 
 
 def flip_points(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
@@ -293,7 +143,8 @@ def flip_points(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     (log-step tree once α > 0) hands over to the bandwidth-optimal ring
     at ``flip_payload_bytes``.  ``None`` flip means one algorithm dominates
     every payload (e.g. α = 0); size-1 axes run no collective and are
-    skipped.
+    skipped.  (The pp boundary p2p is a fixed 2-hop send — no algorithm
+    menu, so no flip row.)
     """
     seen = set()
     rows: List[dict] = []
@@ -319,9 +170,11 @@ def flip_points(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
 def best_step_time(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
                    batch: int, seq: int = 1,
                    algorithms: Sequence[str] = ("auto",),
-                   pod_size: Optional[int] = None) -> float:
+                   pod_size: Optional[int] = None,
+                   max_pp: int = 1) -> float:
     return plan(cfg, hw, chips, batch=batch, seq=seq,
-                algorithms=algorithms, pod_size=pod_size)[0].runtime
+                algorithms=algorithms, pod_size=pod_size,
+                max_pp=max_pp)[0].runtime
 
 
 def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
@@ -340,13 +193,14 @@ def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
             step_kind="train_step", num_devices=p.chips, hardware=hw.name,
             flops=p.flops, mem_bytes=p.mem_bytes,
             wire_bytes=p.t_network * hw.net_bw,
-            wire_bytes_by_kind={"analytic-dp+tp": p.net_bytes},
+            wire_bytes_by_kind={"analytic-dp+tp+pp": p.net_bytes},
             peak_memory_per_device=0.0,
             model_flops=6.0 * params_active * tokens,
             params_total=params_total, params_active=params_active,
             tokens_per_step=tokens, variant=p.algo_label,
             notes=f"rank by plan; {p.algorithm}->{p.algo_label}; links "
-                  f"{p.dp_link}/{p.tp_link}")
+                  f"{p.dp_link}/{p.tp_link}"
+                  + (f"; pp{p.pp} m{p.microbatches}" if p.pp > 1 else ""))
         reports.append(rep.finalize(hw))
     return reports
 
@@ -357,7 +211,10 @@ def _fmt_ms(s: float) -> str:
 
 def format_plan_table(plans: Sequence[MeshPlan]) -> str:
     banded = any(p.runtime_hi > p.runtime for p in plans)
-    head = (f"{'rank':>4} {'mesh':>12} {'algo':>10} {'t_comp ms':>9} "
+    piped = any(p.pp > 1 for p in plans)
+    head = (f"{'rank':>4} {'mesh':>12} "
+            + (f"{'pp':>3} {'mb':>4} " if piped else "")
+            + f"{'algo':>10} {'t_comp ms':>9} "
             f"{'t_mem ms':>9} {'t_net ms':>9} {'step ms':>9} "
             + (f"{'band ms':>19} " if banded else "")
             + f"{'links':>9} {'bottleneck':>10} {'peak%':>6}")
@@ -365,14 +222,37 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
     for i, p in enumerate(plans):
         band = (f"{_fmt_ms(p.runtime_lo)}..{_fmt_ms(p.runtime_hi).strip():<8} "
                 if banded else "")
+        pipe = f"{p.pp:>3} {p.microbatches:>4} " if piped else ""
         link = p.dp_link if p.dp_link == p.tp_link else \
             f"{p.dp_link}/{p.tp_link}"
         lines.append(
-            f"{i + 1:>4} {p.mesh:>12} {p.algo_label:>10} "
+            f"{i + 1:>4} {p.mesh:>12} " + pipe
+            + f"{p.algo_label:>10} "
             f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
             f"{_fmt_ms(p.t_network)} {_fmt_ms(p.runtime)} "
             + band
             + f"{link:>9} {p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
+    return "\n".join(lines)
+
+
+def format_grid_table(grid: PlanGrid, top: int = 1) -> str:
+    """Grid mode: the ``top`` best plans per (chips, batch) point."""
+    top = max(1, top)
+    ranked = top > 1
+    head = (f"{'chips':>6} {'batch':>7} "
+            + (f"{'rank':>4} " if ranked else "")
+            + f"{'mesh':>14} {'mb':>4} "
+            f"{'algo':>10} {'step ms':>9} {'bottleneck':>10} {'peak%':>6}")
+    lines = [head, "-" * len(head)]
+    for chips in grid.chips_list:
+        for batch in grid.batch_list:
+            for r, p in enumerate(grid.plans(chips, batch)[:top]):
+                lines.append(
+                    f"{chips:>6} {batch:>7} "
+                    + (f"{r + 1:>4} " if ranked else "")
+                    + f"{p.mesh:>14} {p.microbatches:>4} "
+                    f"{p.algo_label:>10} {_fmt_ms(p.runtime)} "
+                    f"{p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
     return "\n".join(lines)
 
 
@@ -395,10 +275,28 @@ def format_flip_table(rows: Sequence[dict]) -> str:
     return "\n".join(out)
 
 
+def _plan_dict(p: MeshPlan) -> dict:
+    return {"mesh": p.mesh, "chips": p.chips,
+            "algo_label": p.algo_label, **dataclasses.asdict(p)}
+
+
+def _parse_grid(arg: Optional[str], name: str) -> Optional[List[int]]:
+    if arg is None:
+        return None
+    try:
+        vals = [int(v) for v in arg.split(",") if v.strip()]
+    except ValueError:
+        raise ValueError(f"--{name} wants a comma list of ints, got {arg!r}")
+    if not vals:
+        raise ValueError(f"--{name} is empty")
+    return vals
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.plan",
-        description="Rank (dp, tp) meshes by Ridgeline-projected step time.")
+        description="Rank (dp, tp, pp) meshes by Ridgeline-projected step "
+                    "time; grid mode sweeps chips × batch in one pass.")
     ap.add_argument("--arch")
     ap.add_argument("--chips", type=int)
     ap.add_argument("--batch", type=int, default=None,
@@ -413,6 +311,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--pod-size", type=int, default=None,
                     help="chips per pod; mesh axes spanning pods are priced "
                          "at the spec's 'pod' link instead of primary ICI")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="max pipeline-parallel stages to search; stage "
+                         "counts not dividing n_layers (or the chip "
+                         "budget) are skipped, and 1F1B microbatch counts "
+                         "are searched automatically (default 1 = no "
+                         "pipeline axis)")
+    ap.add_argument("--chips-grid", default=None,
+                    help="comma list of chip budgets -> grid mode "
+                         "(one vectorized pass over every point)")
+    ap.add_argument("--batch-grid", default=None,
+                    help="comma list of global batches -> grid mode")
     ap.add_argument("--algo", default="auto",
                     choices=sorted(collectives.ALGORITHM_ALIASES)
                     + list(collectives.ALGORITHMS) + ["auto", "all"],
@@ -440,8 +349,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 print(f"{name:>16} {src:>12} {s.peak_flops:>12.3g} "
                       f"{s.hbm_bw:>10.3g} {s.net_bw:>10.3g}")
         return 0
-    if args.arch is None or args.chips is None:
-        ap.error("--arch and --chips are required (unless --hardware list)")
+    grid_mode = args.chips_grid is not None or args.batch_grid is not None
+    if args.arch is None or (args.chips is None and args.chips_grid is None):
+        ap.error("--arch and --chips (or --chips-grid) are required "
+                 "(unless --hardware list)")
 
     from repro.configs import get_config, list_archs
     try:
@@ -459,9 +370,64 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         512 if cfg.family == "mlp" else 256)
     algos = collectives.ALGORITHMS if args.algo == "all" else (args.algo,)
 
+    if grid_mode:
+        try:
+            chips_list = _parse_grid(args.chips_grid, "chips-grid") \
+                or [args.chips]
+            batch_list = _parse_grid(args.batch_grid, "batch-grid") or [batch]
+            grid = plan_grid(cfg, hw, chips_list, batch_list, seq=args.seq,
+                             algorithms=algos, pod_size=args.pod_size,
+                             max_pp=args.pp)
+        except (ValueError, KeyError) as e:
+            print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+            return 2
+        # flip points across the whole grid, deduped by (axis, n, link)
+        flip_rows = {}
+        for c in grid.chips_list:
+            for b in grid.batch_list:
+                for r in flip_points(cfg, hw, c, batch=b,
+                                     pod_size=args.pod_size):
+                    flip_rows[(r["axis"], r["group_size"], r["link"])] = r
+        flips = [flip_rows[k] for k in sorted(flip_rows)]
+        if args.as_json:
+            def point_dict(c: int, b: int) -> dict:
+                pts = grid.plans(c, b)
+                d = {"chips": c, "batch": b, "best": _plan_dict(pts[0])}
+                if args.top:
+                    d["plans"] = [_plan_dict(p) for p in pts[:args.top]]
+                return d
+
+            print(json.dumps({
+                "mode": "grid", "arch": args.arch,
+                "chips_grid": list(grid.chips_list),
+                "batch_grid": list(grid.batch_list),
+                "seq": None if cfg.family == "mlp" else args.seq,
+                "pod_size": args.pod_size, "max_pp": args.pp,
+                "algo": args.algo, "algorithms": list(algos),
+                "n_candidates": grid.n_candidates,
+                "flip_points": flips,
+                "hardware": {"source": "calibrated" if args.calibrated
+                             else list_hardware().get(hw.name, "datasheet"),
+                             **dataclasses.asdict(hw)},
+                "points": [point_dict(c, b) for c in grid.chips_list
+                           for b in grid.batch_list],
+            }, indent=1))
+            return 0
+        print(f"# {args.arch} grid on {hw.name}: "
+              f"chips {list(grid.chips_list)} x batch {list(grid.batch_list)}"
+              + ("" if cfg.family == "mlp" else f", seq={args.seq}")
+              + f", algo={args.algo}, max_pp={args.pp} "
+              f"({grid.n_candidates} candidates, one pass)")
+        print(format_grid_table(grid, top=args.top or 1))
+        if args.algo in ("all", "auto"):
+            print()
+            print(format_flip_table(flips))
+        return 0
+
     try:
         plans = plan(cfg, hw, args.chips, batch=batch, seq=args.seq,
-                     algorithms=algos, pod_size=args.pod_size)
+                     algorithms=algos, pod_size=args.pod_size,
+                     max_pp=args.pp)
         flips = flip_points(cfg, hw, args.chips, batch=batch,
                             pod_size=args.pod_size)
     except (ValueError, KeyError) as e:
@@ -470,28 +436,26 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     shown = plans[:args.top] if args.top else plans
     tokens = float(batch) if cfg.family == "mlp" else float(batch) * args.seq
     if args.as_json:
-        def plan_dict(p: MeshPlan) -> dict:
-            return {"mesh": p.mesh, "chips": p.chips,
-                    "algo_label": p.algo_label, **dataclasses.asdict(p)}
-
         print(json.dumps({
             "arch": args.arch, "chips": args.chips, "batch": batch,
             "seq": None if cfg.family == "mlp" else args.seq,
             "pod_size": args.pod_size,
+            "max_pp": args.pp,
             "algo": args.algo,
             "algorithms": list(algos),
             "flip_points": flips,
             "hardware": {"source": "calibrated" if args.calibrated
                          else list_hardware().get(hw.name, "datasheet"),
                          **dataclasses.asdict(hw)},
-            "plans": [plan_dict(p) for p in shown],
-            "best": plan_dict(plans[0]),
+            "plans": [_plan_dict(p) for p in shown],
+            "best": _plan_dict(plans[0]),
         }, indent=1))
         return 0
     print(f"# {args.arch} on {args.chips}x {hw.name}, "
           f"batch={batch}"
           + ("" if cfg.family == "mlp" else f", seq={args.seq}")
-          + f", algo={args.algo}")
+          + f", algo={args.algo}"
+          + (f", max_pp={args.pp}" if args.pp > 1 else ""))
     print(format_plan_table(shown))
     if args.algo in ("all", "auto"):
         print()
@@ -505,8 +469,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     band = (f" (band {best.runtime_lo * 1e3:.3f}..{best.runtime_hi * 1e3:.3f}"
             f" ms from measured_rel_error)"
             if best.runtime_hi > best.runtime else "")
+    bubble = (f", pp{best.pp} m{best.microbatches} "
+              f"({100 * best.bubble_fraction:.0f}% bubble)"
+              if best.pp > 1 else "")
     print(f"\nbest: {best.mesh} ({best.algo_label}) -> "
-          f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound{band}")
+          f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound"
+          f"{bubble}{band}")
     return 0
 
 

@@ -1,0 +1,521 @@
+"""Grid-scale vectorized planning engine: the planner's evaluation core.
+
+``plan_grid(cfg, hw, chips_list, batch_list, ...)`` evaluates the full
+cartesian candidate space
+
+    (dp × tp × pp) × microbatch × collective-algorithm × batch × chips
+
+in NumPy broadcast passes — no per-candidate Python loop anywhere on the
+evaluation path.  Candidate enumeration (divisor lists, feasibility
+filters) is plain integer bookkeeping; everything priced — collective
+wire bytes, α–β link times, algorithm argmins, the Ridgeline sweep — runs
+on flat float64 arrays over the whole candidate set at once, which is
+what turns N separate ``plan()`` calls into one pass at ≥10⁵
+candidates/s (see ``BENCH_ridgeline.json`` → ``planner_grid_*``).
+
+``repro.launch.plan.plan`` is a thin slice of this engine (one chips, one
+batch, ``max_pp=1``), so there is exactly one evaluation core; its
+``pp = 1`` output is regression-pinned bit-identical to the PR 4
+per-candidate planner (``tests/test_plan_grid.py``).
+
+**Mesh layout.**  Axes nest tp-inner / pp-middle / dp-outer, so a ring
+over the tp axis has stride 1, the pp axis stride tp, and the dp axis
+stride tp·pp.  With ``pod_size`` set, any axis whose extent
+(size · stride) exceeds the pod is priced at the spec's ``pod`` link —
+the slowest hop bounds a ring — expressed here as a boolean mask per
+candidate with the link bandwidth/α gathered elementwise.
+
+**Pipeline parallelism (1F1B).**  A pp-way candidate splits the layer
+stack into ``pp`` stages (pp must divide ``n_layers``) and the per-dp
+batch into ``m`` microbatches (m must divide ``batch/dp``).  The 1F1B
+schedule keeps ``pp − 1`` microbatch slots of bubble at the ramp, so the
+step time inflates by the bubble factor
+
+    t_step ≈ (m + pp − 1)/m · t_microbatch_work
+
+equivalently ``t_step = (m + pp − 1) · t_microbatch`` — with each
+microbatch additionally paying 2 point-to-point activation hops
+(boundary activation forward, its gradient backward) priced α–β on the
+link the pp axis rides.  The fill factor ``m + pp − 1`` enters the
+Ridgeline sweep as a per-candidate *derating of the machine peaks*
+(peak/fill, hbm/fill, α·fill against per-microbatch work), so
+classification and projected runtime stay one ``core.sweep`` call; at
+pp = m = 1 the fill is exactly 1.0 and every number is bit-for-bit the
+non-pipelined model.  The dp gradient
+all-reduce runs once per step (after the last microbatch) and is not
+bubbled.  Per-microbatch memory re-streams the stage weights
+(weights + boundary activations per traversal), which reduces exactly to
+the PR 4 accounting at pp = m = 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import sweep as sweep_mod
+from repro.core.hardware import HardwareSpec, get_hardware
+from repro.distributed import collectives
+
+if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
+    from repro.models.common import ModelConfig
+
+#: families with attention/MoE blocks -> Megatron-style 4 syncs per layer
+_ATTENTION_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+#: display shorthand for algorithm tags (table column stays narrow)
+_ALGO_SHORT = {"ring": "ring", "bidir_ring": "bidir", "tree": "tree"}
+
+#: mesh-axis tag of the inter-pod link in ``HardwareSpec.extra_links``
+POD_LINK = "pod"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """One ranked candidate: the mesh, its terms, and its projection."""
+
+    dp: int
+    tp: int
+    algorithm: str               # requested: a concrete tag or "auto"
+    flops: float                 # per chip, per step
+    mem_bytes: float
+    net_bytes: float             # wire bytes across all axes
+    t_compute: float
+    t_memory: float
+    t_network: float             # α–β time, per-axis links (+ pipeline bubble)
+    runtime: float               # projected step time (bound)
+    bottleneck: str
+    peak_fraction: float
+    net_steps: float = 0.0       # serialized hops across all axes
+    dp_link: str = "ici"         # link the dp grad sync rides
+    tp_link: str = "ici"         # link the tp act syncs ride
+    dp_algo: str = "ring"        # algorithm the dp grad sync uses ("-" when
+    #                              the axis is size 1: no collective runs)
+    tp_algo: str = "ring"        # algorithm the tp act syncs use
+    runtime_lo: float = 0.0      # runtime·(1−e), e = hw.model_rel_error
+    runtime_hi: float = 0.0      # runtime·(1+e); lo == hi == runtime when
+    #                              the spec carries no measured error
+    pp: int = 1                  # pipeline stages (1 = no pipeline axis)
+    microbatches: int = 1        # 1F1B microbatch count m
+    pp_link: str = "ici"         # link the pp boundary p2p rides
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    @property
+    def mesh(self) -> str:
+        base = f"dp{self.dp}xtp{self.tp}"
+        return base + (f"xpp{self.pp}" if self.pp > 1 else "")
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Fraction of the pipelined step spent in the 1F1B ramp bubble."""
+        return (self.pp - 1.0) / (self.microbatches + self.pp - 1.0)
+
+    @property
+    def algo_label(self) -> str:
+        """Selected algorithms, compact: one tag when the axes agree."""
+        axes = [_ALGO_SHORT.get(a, a) for a in (self.dp_algo, self.tp_algo)
+                if a != "-"]
+        if not axes:
+            return "-"
+        if len(set(axes)) == 1:
+            return axes[0]
+        return "+".join(axes)
+
+
+@functools.lru_cache(maxsize=None)
+def _divisors(n: int) -> Tuple[int, ...]:
+    """All divisors of n, ascending, by O(√n) enumeration."""
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return tuple(small + large[::-1])
+
+
+def _factor_pairs(chips: int) -> List[Tuple[int, int]]:
+    """(chips//t, t) for every divisor t, t ascending — O(√chips)."""
+    return [(chips // t, t) for t in _divisors(chips)]
+
+
+def _model_width(cfg: ModelConfig) -> int:
+    return cfg.mlp_widths[0] if cfg.family == "mlp" else cfg.d_model
+
+
+@functools.lru_cache(maxsize=None)
+def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
+    """(total, active) parameter counts; closed-form for the MLP family.
+
+    The MLP tower is counted without jax so the planner CLI stays fast on a
+    bare CPU box; every other family defers to the eval_shape-exact
+    accounting in ``launch/specs``.  Memoized on the (frozen, hashable)
+    config, so the eval_shape trace runs once per model per process no
+    matter how many ``plan``/``plan_grid`` calls follow.
+    """
+    if cfg.family == "mlp":
+        widths = cfg.mlp_widths
+        n = 0.0
+        for i, w in enumerate(widths):
+            d_in = widths[i - 1] if i else widths[0]
+            n += d_in * w + w
+        n += widths[-1] * 1 + 1                     # head
+        return n, n
+    from repro.launch.specs import param_counts as exact
+    return exact(cfg)
+
+
+def feasible_meshes(cfg: ModelConfig, chips: int,
+                    batch: int) -> List[Tuple[int, int]]:
+    """(dp, tp) with dp·tp == chips, dp | batch and tp | model width."""
+    width = _model_width(cfg)
+    return [(dp, tp) for dp, tp in _factor_pairs(chips)
+            if batch % dp == 0 and width % tp == 0]
+
+
+def pp_choices(cfg: ModelConfig, chips: int, max_pp: int) -> List[int]:
+    """Pipeline sizes: divide both the chip budget and the layer stack."""
+    return [p for p in _divisors(chips)
+            if p <= max_pp and cfg.n_layers % p == 0]
+
+
+def microbatch_choices(batch_per_dp: int, pp: int) -> Tuple[int, ...]:
+    """1F1B microbatch counts m: divisors of the per-dp batch.
+
+    A pp = 1 candidate has no pipeline to fill, so splitting the batch
+    only adds dispatch α without changing any bandwidth term — m is
+    pinned to 1 there (which is also what keeps the pp = 1 slice
+    bit-identical to the pre-grid planner).
+    """
+    if pp <= 1:
+        return (1,)
+    return _divisors(batch_per_dp)
+
+
+# --- the broadcast evaluation core --------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGrid:
+    """Flat struct-of-arrays result of one ``plan_grid`` pass.
+
+    Every field of length ``n_candidates`` lines up elementwise;
+    ``chips_idx``/``batch_idx`` map each candidate back to its grid point.
+    ``plans(chips, batch)`` materializes ranked :class:`MeshPlan` rows for
+    one point (that is the only per-candidate Python in the module, and it
+    is display-path only); ``best_runtime_grid()`` reduces the whole grid
+    without materializing anything.
+    """
+
+    cfg_name: str
+    hardware: str
+    chips_list: Tuple[int, ...]
+    batch_list: Tuple[int, ...]
+    seq: int
+    pod_size: Optional[int]
+    max_pp: int
+    algorithms: Tuple[str, ...]          # requested, raw (may include "auto")
+
+    chips_idx: np.ndarray                # int, index into chips_list
+    batch_idx: np.ndarray                # int, index into batch_list
+    dp: np.ndarray
+    tp: np.ndarray
+    pp: np.ndarray
+    microbatches: np.ndarray
+    req_idx: np.ndarray                  # index into `algorithms`
+    dp_algo_idx: np.ndarray              # into collectives.ALGORITHMS
+    tp_algo_idx: np.ndarray
+    dp_pod: np.ndarray                   # bool: axis priced at the pod link
+    tp_pod: np.ndarray
+    pp_pod: np.ndarray
+
+    flops: np.ndarray                    # per chip per step
+    mem_bytes: np.ndarray
+    net_bytes: np.ndarray
+    net_steps: np.ndarray
+    t_compute: np.ndarray
+    t_memory: np.ndarray
+    t_network: np.ndarray
+    runtime: np.ndarray
+    bottleneck: np.ndarray               # int8 codes into sweep.RESOURCE_ORDER
+    peak_fraction: np.ndarray
+    runtime_lo: np.ndarray
+    runtime_hi: np.ndarray
+
+    @property
+    def n_candidates(self) -> int:
+        return int(self.runtime.size)
+
+    def labels(self) -> np.ndarray:
+        return sweep_mod._LABELS[self.bottleneck]
+
+    def _point(self, chips: Optional[int], batch: Optional[int]
+               ) -> Tuple[int, int]:
+        ci = 0 if chips is None else self.chips_list.index(chips)
+        bi = 0 if batch is None else self.batch_list.index(batch)
+        return ci, bi
+
+    def point_indices(self, chips: Optional[int] = None,
+                      batch: Optional[int] = None) -> np.ndarray:
+        ci, bi = self._point(chips, batch)
+        return np.nonzero((self.chips_idx == ci)
+                          & (self.batch_idx == bi))[0]
+
+    def _mesh_plan(self, i: int) -> MeshPlan:
+        dp, tp, pp = int(self.dp[i]), int(self.tp[i]), int(self.pp[i])
+        algs = collectives.ALGORITHMS
+        return MeshPlan(
+            dp=dp, tp=tp,
+            algorithm=self.algorithms[int(self.req_idx[i])],
+            flops=float(self.flops[i]),
+            mem_bytes=float(self.mem_bytes[i]),
+            net_bytes=float(self.net_bytes[i]),
+            t_compute=float(self.t_compute[i]),
+            t_memory=float(self.t_memory[i]),
+            t_network=float(self.t_network[i]),
+            runtime=float(self.runtime[i]),
+            bottleneck=str(self.labels()[i]),
+            peak_fraction=float(self.peak_fraction[i]),
+            net_steps=float(self.net_steps[i]),
+            dp_link=POD_LINK if self.dp_pod[i] else "ici",
+            tp_link=POD_LINK if self.tp_pod[i] else "ici",
+            dp_algo="-" if dp <= 1 else algs[int(self.dp_algo_idx[i])],
+            tp_algo="-" if tp <= 1 else algs[int(self.tp_algo_idx[i])],
+            runtime_lo=float(self.runtime_lo[i]),
+            runtime_hi=float(self.runtime_hi[i]),
+            pp=pp, microbatches=int(self.microbatches[i]),
+            pp_link=POD_LINK if self.pp_pod[i] else "ici")
+
+    def plans(self, chips: Optional[int] = None,
+              batch: Optional[int] = None) -> List[MeshPlan]:
+        """Ranked candidates of one grid point (runtime, then smaller tp)."""
+        idx = self.point_indices(chips, batch)
+        order = sorted(idx.tolist(),
+                       key=lambda i: (self.runtime[i], self.tp[i]))
+        return [self._mesh_plan(i) for i in order]
+
+    def best(self, chips: Optional[int] = None,
+             batch: Optional[int] = None) -> MeshPlan:
+        idx = self.point_indices(chips, batch)
+        i = min(idx.tolist(), key=lambda i: (self.runtime[i], self.tp[i]))
+        return self._mesh_plan(i)
+
+    def best_runtime_grid(self) -> np.ndarray:
+        """min projected step time per grid point — (n_chips, n_batch)."""
+        out = np.full((len(self.chips_list), len(self.batch_list)), np.inf)
+        np.minimum.at(out, (self.chips_idx, self.batch_idx), self.runtime)
+        return out
+
+
+@functools.lru_cache(maxsize=4096)
+def _point_candidates(width: int, n_layers: int, chips: int, batch: int,
+                      max_pp: int) -> Tuple[np.ndarray, ...]:
+    """(dp, tp, pp, m) arrays for one grid point — pure integer work.
+
+    Keyed on the integers that actually determine feasibility (model
+    width, layer count, chip budget, batch, pp cap), so repeated grid
+    points — N ``plan()`` calls over the same configs, or overlapping
+    grids — enumerate once per process.  Callers must treat the returned
+    arrays as immutable (they are shared cache entries).
+    """
+    dp_l: List[int] = []
+    tp_l: List[int] = []
+    pp_l: List[int] = []
+    m_l: List[int] = []
+    for pp in _divisors(chips):
+        if pp > max_pp or n_layers % pp:
+            continue
+        for dp, tp in _factor_pairs(chips // pp):
+            if batch % dp or width % tp:
+                continue
+            for m in microbatch_choices(batch // dp, pp):
+                dp_l.append(dp)
+                tp_l.append(tp)
+                pp_l.append(pp)
+                m_l.append(m)
+    return (np.asarray(dp_l, dtype=np.int64),
+            np.asarray(tp_l, dtype=np.int64),
+            np.asarray(pp_l, dtype=np.int64),
+            np.asarray(m_l, dtype=np.int64))
+
+
+def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
+                          batch_list: Sequence[int], max_pp: int,
+                          algo_codes: Sequence[int]
+                          ) -> Dict[str, np.ndarray]:
+    """Flat candidate index arrays over the whole grid.
+
+    Per-point enumeration is cached integer bookkeeping
+    (:func:`_point_candidates`); the algorithm axis and the grid-point
+    index columns are tiled on with numpy, so the warm path does no
+    per-candidate Python at all.  Raises when a grid point has no
+    feasible mesh, naming the point.
+    """
+    width = _model_width(cfg)
+    n_req = len(algo_codes)
+    req_range = np.arange(n_req, dtype=np.intp)
+    cols: List[List[np.ndarray]] = [[] for _ in range(7)]
+    for ci, chips in enumerate(chips_list):
+        for bi, batch in enumerate(batch_list):
+            dp_a, tp_a, pp_a, m_a = _point_candidates(
+                width, cfg.n_layers, int(chips), int(batch), max_pp)
+            if dp_a.size == 0:
+                raise ValueError(
+                    f"no feasible (dp, tp, pp) for chips={chips}, "
+                    f"batch={batch}, width={width}")
+            n = dp_a.size * n_req
+            cols[0].append(np.full(n, ci, dtype=np.intp))
+            cols[1].append(np.full(n, bi, dtype=np.intp))
+            # mesh-major, algorithm-minor — the scalar planner's order
+            cols[2].append(np.repeat(dp_a, n_req))
+            cols[3].append(np.repeat(tp_a, n_req))
+            cols[4].append(np.repeat(pp_a, n_req))
+            cols[5].append(np.repeat(m_a, n_req))
+            cols[6].append(np.tile(req_range, dp_a.size))
+    names = ("chips_idx", "batch_idx", "dp", "tp", "pp", "microbatches",
+             "req_idx")
+    return {name: np.concatenate(parts)
+            for name, parts in zip(names, cols)}
+
+
+def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
+              chips_list: Sequence[int], batch_list: Sequence[int], *,
+              seq: int = 1, algorithms: Sequence[str] = ("auto",),
+              pod_size: Optional[int] = None, max_pp: int = 1) -> PlanGrid:
+    """Evaluate every (dp × tp × pp) × m × algorithm × batch × chips
+    candidate in one broadcast pass.
+
+    ``algorithms`` entries are concrete collective tags (including the
+    ``bidir`` alias) or ``"auto"`` (per-axis α–β argmin over the full
+    menu); each entry is its own candidate row, exactly like the scalar
+    planner.  ``max_pp = 1`` (the default) reproduces the PR 4 candidate
+    space bit-for-bit; larger values add every pipeline size that divides
+    both the chip budget and ``cfg.n_layers``, crossed with every 1F1B
+    microbatch count dividing the per-dp batch.
+    """
+    if isinstance(hw, str):
+        hw = get_hardware(hw)
+    if not chips_list or not batch_list:
+        raise ValueError("chips_list and batch_list must be non-empty")
+    if not algorithms:
+        raise ValueError("need at least one algorithm (or 'auto')")
+    menu = collectives.ALGORITHMS
+    algo_codes = [-1 if a == "auto"
+                  else menu.index(collectives.canonical_algorithm(a))
+                  for a in algorithms]
+
+    cand = _enumerate_candidates(cfg, chips_list, batch_list, max_pp,
+                                 algo_codes)
+    dp = cand["dp"].astype(np.float64)
+    tp = cand["tp"].astype(np.float64)
+    pp = cand["pp"].astype(np.float64)
+    m = cand["microbatches"].astype(np.float64)
+    code = np.asarray(algo_codes, dtype=np.int64)[cand["req_idx"]]
+    batch = np.asarray(batch_list, dtype=np.float64)[cand["batch_idx"]]
+
+    n_total, n_active = param_counts(cfg)
+    width = _model_width(cfg)
+    tokens = batch if cfg.family == "mlp" else batch * float(seq)
+    act_dtype = 4 if cfg.family == "mlp" else 2     # fp32 MLP, bf16 LMs
+    syncs = 4.0 if cfg.family in _ATTENTION_FAMILIES else 2.0
+    params_bytes = n_total * 4.0                    # fp32 master weights
+
+    # --- per-candidate work terms (step- and microbatch-level) ---------------
+    flops_step = 6.0 * n_active * tokens / (dp * tp * pp)
+    flops_mb = flops_step / m
+    act_bytes = (tokens / dp) * width * act_dtype   # one boundary activation
+    act_mb = act_bytes / m
+    stage_layers = float(cfg.n_layers) / pp
+    mem_mb = params_bytes / (tp * pp) + 2.0 * stage_layers * act_mb
+
+    # --- per-axis link routing as boolean masks ------------------------------
+    # extents: tp rides stride 1, pp stride tp, dp stride tp·pp
+    if pod_size is None:
+        dp_pod = tp_pod = pp_pod = np.zeros(dp.shape, dtype=bool)
+    else:
+        dp_pod = (dp > 1) & (dp * tp * pp > pod_size)
+        pp_pod = (pp > 1) & (pp * tp > pod_size)
+        tp_pod = (tp > 1) & (tp > pod_size)
+        if bool(dp_pod.any() | pp_pod.any() | tp_pod.any()):
+            hw.bandwidth_for(POD_LINK)  # actionable KeyError if spec has none
+    bw_pri, a_pri = hw.bandwidth_for(None), hw.alpha_for(None)
+    if pod_size is not None and POD_LINK in hw.extra_links:
+        bw_pod, a_pod = hw.bandwidth_for(POD_LINK), hw.alpha_for(POD_LINK)
+    else:
+        bw_pod, a_pod = bw_pri, a_pri
+    dp_bw = np.where(dp_pod, bw_pod, bw_pri)
+    dp_alpha = np.where(dp_pod, a_pod, a_pri)
+    tp_bw = np.where(tp_pod, bw_pod, bw_pri)
+    tp_alpha = np.where(tp_pod, a_pod, a_pri)
+    pp_bw = np.where(pp_pod, bw_pod, bw_pri)
+    pp_alpha = np.where(pp_pod, a_pod, a_pri)
+
+    # --- collective algorithm selection, per axis, whole grid at once --------
+    # "auto" rows see the full menu; fixed rows see exactly their algorithm
+    allowed = (code[None, :] < 0) | \
+        (np.arange(len(menu))[:, None] == code[None, :])
+    dp_wire, dp_steps, dp_sel = collectives.best_all_reduce_grid(
+        params_bytes / (tp * pp), dp, dp_bw, dp_alpha, menu, allowed=allowed)
+    tp_wire, tp_steps, tp_sel = collectives.best_all_reduce_grid(
+        act_mb, tp, tp_bw, tp_alpha, menu, allowed=allowed)
+    dp_time = dp_alpha * dp_steps + dp_wire / dp_bw
+    tp_scale = syncs * stage_layers                 # syncs per microbatch
+    tp_wire_mb = tp_scale * tp_wire
+    tp_steps_mb = tp_scale * tp_steps
+    tp_time = tp_alpha * tp_steps_mb + tp_wire_mb / tp_bw
+
+    # pp boundary p2p: 2 hops (act fwd + grad bwd) per microbatch
+    pp_bytes_mb = collectives.pp_boundary_bytes(act_mb, pp)
+    pp_steps_mb = 2.0 * np.where(pp > 1.0, 1.0, 0.0)
+    pp_time = pp_alpha * pp_steps_mb + pp_bytes_mb / pp_bw
+
+    # --- 1F1B pipeline fill + one Ridgeline sweep over the candidate set -----
+    # The serialized critical path holds m + pp − 1 microbatch slots
+    # (t_step = (m + pp − 1) · t_microbatch = (m + pp − 1)/m · t_work), so
+    # each per-microbatch resource time scales by `fill`; expressed as a
+    # per-candidate derating of the machine peaks (peak/fill, α·fill) so
+    # one vectorized sweep prices and classifies everything.  At
+    # pp = m = 1 the fill is exactly 1.0 and every number is bit-for-bit
+    # the PR 4 non-pipelined model.
+    fill = m + pp - 1.0
+    # dp grad sync runs once per step (after the last backward), unfilled;
+    # per-axis α–β times fold into primary-link-equivalent bytes
+    t_net_step = fill * (tp_time + pp_time) + dp_time
+    eff_net_bytes = t_net_step * hw.net_bw
+    res = sweep_mod.sweep(
+        flops_mb, mem_mb, eff_net_bytes, hw,
+        peak_flops=hw.peak_flops / fill, hbm_bw=hw.hbm_bw / fill,
+        alpha_compute=hw.alpha_compute * fill,
+        alpha_memory=hw.alpha_memory * fill, net_steps=0.0)
+
+    attained = np.where(res.runtime > 0,
+                        sweep_mod._safe_div(flops_step, res.runtime), 0.0)
+    err = max(float(hw.model_rel_error), 0.0)
+    return PlanGrid(
+        cfg_name=cfg.name, hardware=hw.name,
+        chips_list=tuple(int(c) for c in chips_list),
+        batch_list=tuple(int(b) for b in batch_list),
+        seq=seq, pod_size=pod_size, max_pp=max_pp,
+        algorithms=tuple(algorithms),
+        chips_idx=cand["chips_idx"], batch_idx=cand["batch_idx"],
+        dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
+        microbatches=cand["microbatches"], req_idx=cand["req_idx"],
+        dp_algo_idx=dp_sel, tp_algo_idx=tp_sel,
+        dp_pod=dp_pod, tp_pod=tp_pod, pp_pod=pp_pod,
+        flops=flops_step, mem_bytes=m * mem_mb,
+        net_bytes=dp_wire + m * tp_wire_mb + m * pp_bytes_mb,
+        net_steps=dp_steps + m * tp_steps_mb + m * pp_steps_mb,
+        t_compute=res.t_compute, t_memory=res.t_memory,
+        t_network=res.t_network, runtime=res.runtime,
+        bottleneck=res.bottleneck,
+        peak_fraction=sweep_mod._safe_div(attained, hw.peak_flops),
+        runtime_lo=np.maximum(res.runtime * (1.0 - err), 0.0),
+        runtime_hi=res.runtime * (1.0 + err))

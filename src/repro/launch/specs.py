@@ -192,11 +192,15 @@ def cache_logical_specs(cfg: ModelConfig, cache_abs) -> Any:
 
 # --- MODEL_FLOPS accounting ---------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
 def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
     """(total, active-per-token) parameter counts from abstract shapes.
 
     Active excludes the embedding gather but includes the LM head matmul;
     MoE expert tensors count at top_k/E (+ shared experts fully).
+    Memoized on the (frozen, hashable) config: the ``jax.eval_shape``
+    trace behind ``abstract_params`` runs once per model per process, not
+    once per ``plan()``/``model_flops`` call.
     """
     params = abstract_params(cfg)
     flat = jax.tree_util.tree_flatten_with_path(params)[0]

@@ -425,12 +425,16 @@ class TestPlannerAlgoSelection:
 
 
 GOLDEN_TOP_KEYS = {"arch", "chips", "batch", "seq", "pod_size", "algo",
-                   "algorithms", "flip_points", "hardware", "plans", "best"}
+                   "algorithms", "flip_points", "hardware", "plans", "best",
+                   # ISSUE 5: the pipeline-parallel third axis
+                   "max_pp"}
 GOLDEN_PLAN_KEYS = {"mesh", "chips", "algo_label", "dp", "tp", "algorithm",
                     "flops", "mem_bytes", "net_bytes", "t_compute",
                     "t_memory", "t_network", "runtime", "bottleneck",
                     "peak_fraction", "net_steps", "dp_link", "tp_link",
-                    "dp_algo", "tp_algo", "runtime_lo", "runtime_hi"}
+                    "dp_algo", "tp_algo", "runtime_lo", "runtime_hi",
+                    # ISSUE 5: pp axis + 1F1B microbatching ride along
+                    "pp", "microbatches", "pp_link"}
 GOLDEN_FLIP_KEYS = {"axis", "group_size", "link", "bandwidth", "alpha",
                     "flip_payload_bytes", "small_payload_algo",
                     "large_payload_algo"}

@@ -1,0 +1,491 @@
+"""ISSUE 5 regression tests: the grid-scale vectorized planner.
+
+Four layers:
+
+  * properties (hypothesis via ``tests/_hypothesis_compat``):
+    ``collectives.best_all_reduce_grid`` agrees elementwise with the
+    scalar argmin, and the whole grid engine agrees with a
+    straightforward per-candidate scalar reference (dp/tp/pp, pod
+    routing, auto algorithm selection, 1F1B fill);
+  * pinned pp = 1 bit-parity: the grid slice reproduces the committed
+    PR 4 planner output (``tests/golden/plan_pr4_*.json``) exactly —
+    ranking, runtimes, per-axis algorithms, every float bit-for-bit;
+  * the pipeline model itself: feasibility (pp | n_layers,
+    m | batch/dp), the (m + pp − 1) fill algebra, p2p link routing;
+  * BENCH regression: the committed ``BENCH_ridgeline.json`` must record
+    ≥ 10⁵ candidates/s on the grid path and ≥ 10× speedup over per-point
+    ``plan()`` looping.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import CLX, TPU_V5E, HardwareSpec
+from repro.distributed import collectives as coll
+from repro.launch import plan_grid as pg
+from repro.launch.plan import plan
+from tests._hypothesis_compat import given, settings, st
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden")
+
+ALPHA_POD = HardwareSpec(
+    "alpha_pod", peak_flops=197e12, hbm_bw=819e9, net_bw=50e9,
+    extra_links={"pod": 25e9}, alpha_network=1e-5,
+    link_alphas={"pod": 5e-5})
+
+
+def _cfg(name="dlrm-mlp"):
+    from repro.configs import get_config
+    return get_config(name)
+
+
+# --- vectorized best_all_reduce == scalar argmin ------------------------------
+
+
+class TestBestAllReduceGrid:
+    @settings(max_examples=60)
+    @given(payload=st.floats(min_value=1.0, max_value=1e12),
+           n=st.integers(min_value=1, max_value=2048),
+           bw=st.floats(min_value=1e6, max_value=1e12),
+           alpha=st.one_of(st.just(0.0),
+                           st.floats(min_value=1e-9, max_value=1e-2)))
+    def test_property_elementwise_matches_scalar(self, payload, n, bw,
+                                                 alpha):
+        """Each element of a mixed grid selects what the scalar selects,
+        with identical wire bytes / steps — including the tie-break."""
+        payloads = np.array([payload, payload * 3.0, 1.0])
+        ns = np.array([n, max(1, n // 2), n])
+        wire, steps, idx = coll.best_all_reduce_grid(payloads, ns, bw, alpha)
+        for i in range(payloads.size):
+            algo, cost = coll.best_all_reduce(float(payloads[i]),
+                                              float(ns[i]), bw, alpha)
+            assert coll.ALGORITHMS[int(idx[i])] == algo
+            assert float(wire[i]) == float(cost.wire_bytes)
+            assert float(steps[i]) == float(cost.steps)
+
+    def test_per_element_link_terms(self):
+        """bw and alpha broadcast per element (the per-axis link gather)."""
+        payload, n = 1e5, 16
+        bws = np.array([50e9, 25e9])
+        alphas = np.array([0.0, 5e-5])
+        _, _, idx = coll.best_all_reduce_grid(payload, n, bws, alphas)
+        for i in range(2):
+            algo, _ = coll.best_all_reduce(payload, n, float(bws[i]),
+                                           float(alphas[i]))
+            assert coll.ALGORITHMS[int(idx[i])] == algo
+
+    def test_allowed_mask_pins_fixed_algorithms(self):
+        payload = np.array([1e3, 1e9])
+        allowed = np.zeros((len(coll.ALGORITHMS), 2), dtype=bool)
+        allowed[coll.ALGORITHMS.index("tree"), :] = True
+        wire, steps, idx = coll.best_all_reduce_grid(
+            payload, 16, 50e9, 1e-5, allowed=allowed)
+        assert [coll.ALGORITHMS[int(i)] for i in idx] == ["tree", "tree"]
+        want = coll.all_reduce(payload, 16.0, "tree")
+        assert np.array_equal(wire, want.wire_bytes)
+        assert np.array_equal(steps, np.broadcast_to(want.steps, (2,)))
+
+    def test_empty_menu_raises(self):
+        with pytest.raises(ValueError, match="at least one"):
+            coll.best_all_reduce_grid(1.0, 4, 1e9, algorithms=())
+
+    def test_fully_masked_element_raises(self):
+        """A column with no allowed algorithm is a caller bug, not a
+        silent algorithm-0 selection."""
+        allowed = np.array([[True, False], [True, False], [True, False]])
+        with pytest.raises(ValueError, match="excludes every algorithm"):
+            coll.best_all_reduce_grid(np.array([1e3, 1e6]), 8, 1e9,
+                                      allowed=allowed)
+
+
+# --- the scalar reference the grid must agree with ----------------------------
+
+
+def _scalar_reference(cfg, hw, chips, batch, seq, pod_size, max_pp,
+                      algorithms):
+    """Straightforward per-candidate evaluation — the model, stated plainly.
+
+    Returns {(dp, tp, pp, m, algo_requested): dict of quantities}.
+    Deliberately re-derives everything with scalar calls (no grid code) so
+    elementwise agreement is a real check, not a tautology.
+    """
+    n_total, n_active = pg.param_counts(cfg)
+    width = pg._model_width(cfg)
+    tokens = float(batch) if cfg.family == "mlp" else float(batch) * seq
+    act_dtype = 4 if cfg.family == "mlp" else 2
+    syncs = 4.0 if cfg.family in pg._ATTENTION_FAMILIES else 2.0
+    params_bytes = n_total * 4.0
+    eff = hw.compute_eff.eff
+
+    def link_of(n, inner):
+        if pod_size is None or n <= 1 or n * inner <= pod_size:
+            return None
+        return "pod"
+
+    def axis(payload, n, link, algo):
+        """(algo_name, time, wire, steps) of one axis under one request."""
+        bw, alpha = hw.bandwidth_for(link), hw.alpha_for(link)
+        if n <= 1:
+            return "-", 0.0, 0.0, 0.0
+        if algo == "auto":
+            name, cost = coll.best_all_reduce(payload, n, bw, alpha)
+        else:
+            name = coll.canonical_algorithm(algo)
+            cost = coll.all_reduce(payload, n, name)
+        return name, float(cost.time(bw, alpha)), \
+            float(cost.wire_bytes), float(cost.steps)
+
+    out = {}
+    for pp in pg.pp_choices(cfg, chips, max_pp):
+        for dp, tp in pg._factor_pairs(chips // pp):
+            if batch % dp or width % tp:
+                continue
+            for m in pg.microbatch_choices(batch // dp, pp):
+                fill = m + pp - 1.0
+                f_step = 6.0 * n_active * tokens / (dp * tp * pp)
+                f_mb = f_step / m
+                act = (tokens / dp) * width * act_dtype
+                act_mb = act / m
+                stage_layers = cfg.n_layers / pp
+                mem_mb = params_bytes / (tp * pp) \
+                    + 2.0 * stage_layers * act_mb
+                dp_link = link_of(dp, tp * pp)
+                tp_link = link_of(tp, 1)
+                pp_link = link_of(pp, tp)
+                for algo in algorithms:
+                    dp_algo, dp_t, _, _ = axis(params_bytes / (tp * pp),
+                                               dp, dp_link, algo)
+                    tp_algo, tp_t1, _, _ = axis(act_mb, tp, tp_link, algo)
+                    tp_t = syncs * stage_layers * tp_t1
+                    pp_t = 0.0
+                    if pp > 1:
+                        pp_t = hw.alpha_for(pp_link) * 2.0 \
+                            + 2.0 * act_mb / hw.bandwidth_for(pp_link)
+                    t_n = fill * (tp_t + pp_t) + dp_t
+                    t_c = fill * ((hw.alpha_compute if f_mb > 0 else 0.0)
+                                  + f_mb / (hw.peak_flops * eff(f_mb)))
+                    t_m = fill * ((hw.alpha_memory if mem_mb > 0 else 0.0)
+                                  + mem_mb / hw.hbm_bw)
+                    out[(dp, tp, pp, m, algo)] = {
+                        "runtime": max(t_c, t_m, t_n),
+                        "t_compute": t_c, "t_memory": t_m, "t_network": t_n,
+                        "dp_algo": dp_algo, "tp_algo": tp_algo,
+                        "dp_link": dp_link or "ici",
+                        "tp_link": tp_link or "ici",
+                        "pp_link": pp_link or "ici",
+                        "flops": f_step}
+    return out
+
+
+class TestGridMatchesScalarReference:
+    @settings(max_examples=20)
+    @given(chips=st.sampled_from([4, 8, 16, 32]),
+           batch=st.sampled_from([32, 64, 512]),
+           pod=st.sampled_from([None, 4, 8]),
+           max_pp=st.sampled_from([1, 2, 4, 8]),
+           alpha_n=st.one_of(st.just(0.0),
+                             st.floats(min_value=1e-8, max_value=1e-4)))
+    def test_property_elementwise_agreement(self, chips, batch, pod,
+                                            max_pp, alpha_n):
+        cfg = _cfg()
+        hw = HardwareSpec("box", 197e12, 819e9, 50e9,
+                          extra_links={"pod": 25e9}, alpha_network=alpha_n,
+                          link_alphas={"pod": 5.0 * alpha_n})
+        plans = plan(cfg, hw, chips, batch=batch, pod_size=pod,
+                     max_pp=max_pp)
+        ref = _scalar_reference(cfg, hw, chips, batch, 1, pod, max_pp,
+                                ("auto",))
+        assert len(plans) == len(ref)
+        for p in plans:
+            r = ref[(p.dp, p.tp, p.pp, p.microbatches, p.algorithm)]
+            assert p.runtime == pytest.approx(r["runtime"], rel=1e-9)
+            assert p.t_compute == pytest.approx(r["t_compute"], rel=1e-9,
+                                                abs=1e-300)
+            assert p.t_memory == pytest.approx(r["t_memory"], rel=1e-9)
+            assert p.t_network == pytest.approx(r["t_network"], rel=1e-9,
+                                                abs=1e-300)
+            assert p.flops == pytest.approx(r["flops"], rel=1e-12)
+            assert (p.dp_algo, p.tp_algo) == (r["dp_algo"], r["tp_algo"])
+            assert (p.dp_link, p.tp_link, p.pp_link) == \
+                (r["dp_link"], r["tp_link"], r["pp_link"])
+
+    def test_fixed_algorithms_agree_too(self):
+        cfg = _cfg()
+        for algo in coll.ALGORITHMS:
+            plans = plan(cfg, ALPHA_POD, 16, batch=64, pod_size=8,
+                         max_pp=4, algorithms=(algo,))
+            ref = _scalar_reference(cfg, ALPHA_POD, 16, 64, 1, 8, 4,
+                                    (algo,))
+            assert len(plans) == len(ref)
+            for p in plans:
+                r = ref[(p.dp, p.tp, p.pp, p.microbatches, algo)]
+                assert p.runtime == pytest.approx(r["runtime"], rel=1e-9)
+                assert (p.dp_algo, p.tp_algo) == (r["dp_algo"], r["tp_algo"])
+
+
+# --- pinned pp = 1 bit-parity with the PR 4 planner ---------------------------
+
+
+def _golden(fname):
+    path = os.path.join(_GOLDEN_DIR, fname)
+    with open(path) as f:
+        return json.load(f)
+
+
+def _assert_bit_identical(plans, golden):
+    """Every float of every golden plan must survive the grid rewrite
+    bit-for-bit (JSON repr round-trips doubles exactly)."""
+    assert [p.mesh for p in plans] == [g["mesh"] for g in golden["plans"]]
+    import dataclasses
+    for p, g in zip(plans, golden["plans"]):
+        d = {"mesh": p.mesh, "chips": p.chips, "algo_label": p.algo_label,
+             **dataclasses.asdict(p)}
+        for key, want in g.items():
+            assert d[key] == want, (p.mesh, key, want, d[key])
+
+
+class TestPinnedPr4Parity:
+    def test_dlrm_mlp_chips16(self):
+        g = _golden("plan_pr4_dlrm_mlp_c16.json")
+        plans = plan(_cfg("dlrm-mlp"), TPU_V5E, 16, batch=g["batch"])
+        _assert_bit_identical(plans, g)
+
+    @pytest.mark.slow
+    def test_qwen2_7b_chips32_pod16(self):
+        g = _golden("plan_pr4_qwen2_7b_c32_pod16.json")
+        plans = plan(_cfg("qwen2-7b"), TPU_V5E, 32, batch=g["batch"],
+                     seq=g["seq"], pod_size=g["pod_size"])
+        _assert_bit_identical(plans, g)
+
+    def test_pp1_candidates_identical_inside_larger_grid(self):
+        """The pp = 1 rows of a max_pp > 1 search carry the exact same
+        numbers as the pure dp × tp search — the pipeline axis only adds
+        candidates, never perturbs existing ones."""
+        cfg = _cfg()
+        base = {(p.dp, p.tp): p for p in plan(cfg, TPU_V5E, 16, batch=512)}
+        wide = [p for p in plan(cfg, TPU_V5E, 16, batch=512, max_pp=8)
+                if p.pp == 1]
+        assert {(p.dp, p.tp) for p in wide} == set(base)
+        for p in wide:
+            b = base[(p.dp, p.tp)]
+            assert (p.runtime, p.t_compute, p.t_memory, p.t_network) == \
+                (b.runtime, b.t_compute, b.t_memory, b.t_network)
+            assert (p.dp_algo, p.tp_algo) == (b.dp_algo, b.tp_algo)
+            assert p.microbatches == 1
+
+
+# --- the pipeline model itself ------------------------------------------------
+
+
+class TestPipelineAxis:
+    def test_pp_divides_layers_and_m_divides_per_dp_batch(self):
+        cfg = _cfg()                       # n_layers = 8
+        plans = plan(cfg, TPU_V5E, 16, batch=96, max_pp=16)
+        assert any(p.pp > 1 for p in plans)
+        for p in plans:
+            assert cfg.n_layers % p.pp == 0
+            assert p.dp * p.tp * p.pp == 16 == p.chips
+            assert 96 % p.dp == 0
+            assert (96 // p.dp) % p.microbatches == 0
+            if p.pp == 1:
+                assert p.microbatches == 1
+        # pp = 16 does not divide 8 layers -> never enumerated
+        assert all(p.pp in (1, 2, 4, 8) for p in plans)
+
+    def test_fill_factor_algebra(self):
+        """A pp candidate's resource times carry exactly the 1F1B fill
+        (m + pp − 1) over its per-microbatch compute time."""
+        cfg = _cfg()
+        plans = plan(cfg, CLX, 8, batch=512, max_pp=4)
+        n_total, n_active = pg.param_counts(cfg)
+        for p in plans:
+            if p.pp == 1:
+                continue
+            fill = p.microbatches + p.pp - 1.0
+            f_mb = p.flops / p.microbatches
+            want_tc = fill * (f_mb / CLX.peak_flops)
+            assert p.t_compute == pytest.approx(want_tc, rel=1e-12)
+            assert p.runtime == pytest.approx(
+                max(p.t_compute, p.t_memory, p.t_network), rel=1e-12)
+            assert 0.0 < p.bubble_fraction < 1.0
+
+    def test_more_microbatches_shrink_the_bubble(self):
+        """With α = 0 the fill overhead is the only cost of small m on the
+        compute term: t_compute is non-increasing in m at fixed mesh."""
+        cfg = _cfg()
+        plans = [p for p in plan(cfg, CLX, 8, batch=512, max_pp=4)
+                 if (p.dp, p.tp, p.pp) == (1, 1, 8)] or \
+                [p for p in plan(cfg, CLX, 8, batch=512, max_pp=8)
+                 if p.pp == 8]
+        by_m = sorted(plans, key=lambda p: p.microbatches)
+        ts = [p.t_compute for p in by_m]
+        assert ts == sorted(ts, reverse=True)
+
+    def test_pp_p2p_rides_the_pod_link_when_axis_spans_pods(self):
+        cfg = _cfg()
+        plans = plan(cfg, ALPHA_POD, 32, batch=64, pod_size=4, max_pp=8)
+        spanning = [p for p in plans if p.pp > 1 and p.pp * p.tp > 4]
+        contained = [p for p in plans if p.pp > 1 and p.pp * p.tp <= 4]
+        assert spanning and contained
+        assert all(p.pp_link == "pod" for p in spanning)
+        assert all(p.pp_link == "ici" for p in contained)
+
+    def test_pipelining_can_win_when_network_bound(self):
+        """The acceptance scenario: with more chips than the dp × tp
+        space can use well, a pipelined mesh must rank strictly better."""
+        cfg = _cfg()
+        flat = plan(cfg, CLX, 64, batch=256)[0]
+        piped = plan(cfg, CLX, 64, batch=256, max_pp=8)[0]
+        assert piped.pp > 1
+        assert piped.runtime < flat.runtime
+
+
+# --- plan_grid API ------------------------------------------------------------
+
+
+class TestPlanGridApi:
+    def test_grid_equals_per_point_plan_calls(self):
+        cfg = _cfg()
+        chips_l, batch_l = [8, 16, 32], [256, 512]
+        grid = pg.plan_grid(cfg, CLX, chips_l, batch_l, max_pp=4)
+        bests = grid.best_runtime_grid()
+        assert bests.shape == (3, 2)
+        for i, c in enumerate(chips_l):
+            for j, b in enumerate(batch_l):
+                pts = plan(cfg, CLX, c, batch=b, max_pp=4)
+                assert bests[i, j] == pts[0].runtime
+                assert grid.best(c, b).mesh == pts[0].mesh
+                got = grid.plans(c, b)
+                assert [p.mesh for p in got] == [p.mesh for p in pts]
+                assert [p.runtime for p in got] == \
+                    [p.runtime for p in pts]
+
+    def test_accepts_spec_names(self):
+        grid = pg.plan_grid(_cfg(), "clx", [8], [512])
+        assert grid.hardware == "clx"
+        assert grid.n_candidates == len(grid.runtime)
+
+    def test_infeasible_point_raises_with_the_point_named(self):
+        with pytest.raises(ValueError, match="chips=12"):
+            pg.plan_grid(_cfg(), CLX, [8, 12], [8])
+
+    def test_empty_grid_raises(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            pg.plan_grid(_cfg(), CLX, [], [512])
+
+    def test_divisors_and_factor_pairs(self):
+        for n in (1, 2, 12, 36, 97, 1024):
+            want = [d for d in range(1, n + 1) if n % d == 0]
+            assert list(pg._divisors(n)) == want
+            assert pg._factor_pairs(n) == [(n // t, t) for t in want]
+
+    def test_param_counts_memoized(self):
+        pg.param_counts.cache_clear()
+        cfg = _cfg()
+        a = pg.param_counts(cfg)
+        b = pg.param_counts(_cfg())        # equal config -> cache hit
+        assert a == b
+        info = pg.param_counts.cache_info()
+        assert info.hits >= 1 and info.misses == 1
+
+
+# --- CLI: --pp and grid modes -------------------------------------------------
+
+
+class TestGridCli:
+    def test_pp_flag_ranks_pipelined_meshes(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips", "16", "--pp",
+                     "4"]) == 0
+        out = capsys.readouterr().out
+        assert "xpp" in out and " pp " in out and " mb " in out
+
+    def test_grid_mode_table(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips-grid", "8,16",
+                     "--batch-grid", "256,512", "--hardware", "clx",
+                     "--pp", "4"]) == 0
+        out = capsys.readouterr().out
+        assert "grid on clx" in out and "one pass" in out
+        assert out.count("\n") >= 6        # header + 4 grid points
+
+    def test_grid_mode_honors_top_and_prints_flips(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips-grid", "8,16",
+                     "--batch-grid", "512", "--top", "3"]) == 0
+        out = capsys.readouterr().out
+        assert " rank " in out               # ranked rows per grid point
+        assert "flip points" in out          # same report as point mode
+        # 2 grid points x 3 ranks of table rows
+        assert sum(l.lstrip().startswith(("8 ", "16 "))
+                   for l in out.splitlines()) == 6
+
+    def test_grid_json_top_adds_ranked_plans(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips-grid", "8",
+                     "--batch-grid", "512", "--top", "2", "--json"]) == 0
+        d = json.loads(capsys.readouterr().out)
+        assert "flip_points" in d
+        assert len(d["points"][0]["plans"]) == 2
+        assert d["points"][0]["plans"][0] == d["points"][0]["best"]
+
+    def test_grid_mode_json(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips-grid", "8,16",
+                     "--batch-grid", "512", "--json"]) == 0
+        d = json.loads(capsys.readouterr().out)
+        assert d["mode"] == "grid"
+        assert d["chips_grid"] == [8, 16] and d["batch_grid"] == [512]
+        assert len(d["points"]) == 2
+        for pt in d["points"]:
+            assert pt["best"]["runtime"] > 0
+            assert {"pp", "microbatches", "pp_link"} <= set(pt["best"])
+
+    def test_single_point_json_carries_max_pp_and_pp_fields(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips", "8", "--pp", "2",
+                     "--json"]) == 0
+        d = json.loads(capsys.readouterr().out)
+        assert d["max_pp"] == 2
+        assert any(p["pp"] > 1 for p in d["plans"])
+
+    def test_bad_grid_spec_errors(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips-grid", "8,x"]) == 2
+        assert "comma list" in capsys.readouterr().err
+
+
+# --- BENCH regression: grid throughput pins -----------------------------------
+
+
+class TestBenchGridRegression:
+    """Pins the committed BENCH_ridgeline.json grid-planner numbers.
+
+    The committed artifact is regenerated by `make ci`; these bounds are
+    the ISSUE 5 acceptance criteria — ≥ 10⁵ candidates/s through the grid
+    path and ≥ 10× over per-point ``plan()`` looping on the same grid.
+    """
+
+    @pytest.fixture()
+    def bench(self):
+        path = os.path.join(_REPO_ROOT, "BENCH_ridgeline.json")
+        if not os.path.exists(path):
+            pytest.skip("no BENCH_ridgeline.json baseline")
+        return json.loads(open(path).read())
+
+    @pytest.fixture()
+    def grid_stats(self, bench):
+        stats = bench.get("planner_grid")
+        if not stats:
+            pytest.skip("baseline predates the grid planner")
+        return stats
+
+    def test_candidates_per_s_at_least_1e5(self, grid_stats):
+        assert grid_stats["candidates_per_s"] >= 1e5, grid_stats
+
+    def test_grid_at_least_10x_faster_than_plan_loop(self, grid_stats):
+        assert grid_stats["speedup_vs_plan_loop"] >= 10.0, grid_stats
