@@ -187,6 +187,34 @@ def main() -> int:
                  f"speedup={speedup:.1f}x"))
     ok &= cands_per_s >= 1e5 and speedup >= 10.0
 
+    # memory-feasibility cut (ISSUE 6): the same grid against a
+    # capacity-starved spec, ZeRO axis on — the mask must prune a real
+    # fraction of the candidate set while the masked grid still clears
+    # the 1e5-enumerated-candidates/s raw-speed pin
+    import dataclasses as _dc
+    clx_small = _dc.replace(clx, hbm_capacity_bytes=1e9)
+    fgrid = grid_mod.plan_grid(cfg_mlp, clx_small, chips_grid, batch_grid,
+                               max_pp=max_pp, zero_stages=(0, 1, 2, 3))
+    feas_s = _best_of(3, lambda: grid_mod.plan_grid(
+        cfg_mlp, clx_small, chips_grid, batch_grid, max_pp=max_pp,
+        zero_stages=(0, 1, 2, 3)))
+    feas_cands_per_s = fgrid.n_enumerated / feas_s
+    planner_feasibility = {
+        "chips_grid": list(chips_grid), "batch_grid": list(batch_grid),
+        "max_pp": max_pp, "zero_stages": [0, 1, 2, 3],
+        "hbm_capacity_bytes": clx_small.hbm_capacity_bytes,
+        "n_enumerated": fgrid.n_enumerated,
+        "n_candidates": fgrid.n_candidates,
+        "prune_fraction": fgrid.pruned_fraction,
+        "grid_ms": feas_s * 1e3,
+        "candidates_per_s": feas_cands_per_s,
+    }
+    rows.append(("planner_feasibility_prune", feas_s * 1e6,
+                 f"enumerated={fgrid.n_enumerated};"
+                 f"pruned_frac={fgrid.pruned_fraction:.3f};"
+                 f"per_s={feas_cands_per_s:.3g}"))
+    ok &= feas_cands_per_s >= 1e5 and 0.0 < fgrid.pruned_fraction < 1.0
+
     # algorithm selection: with any per-hop latency the log-step tree must
     # win small payloads and a bandwidth-optimal ring large ones, with the
     # planner-reported flip sitting in between (qwen2-7b's dp axis payload
@@ -276,6 +304,7 @@ def main() -> int:
             "schema": "repro.bench/v1",
             "sweep_cells_per_s": cells_per_s,
             "planner_grid": planner_grid,
+            "planner_feasibility": planner_feasibility,
             "calibration": calibration,
             "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                      for n, us, d in rows],

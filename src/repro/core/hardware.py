@@ -137,6 +137,11 @@ class HardwareSpec:
         saturating form from sized-GEMM measurements.
       vmem_bytes: fast scratchpad capacity per core (VMEM for TPU), used by
         kernel block-shape planning, not by the Ridgeline itself.
+      hbm_capacity_bytes: device main-memory *capacity* per chip, bytes.
+        The Ridgeline bounds time; capacity bounds which candidates can run
+        at all — the planner's working-set model (``launch/memory``) prunes
+        meshes whose per-chip footprint exceeds it.  ``0`` means unknown
+        (no constraint), which every pre-existing custom spec gets for free.
     """
 
     name: str
@@ -151,6 +156,7 @@ class HardwareSpec:
     model_rel_error: float = 0.0
     compute_eff: EfficiencyModel = EfficiencyModel()
     vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB (v5e VMEM per core)
+    hbm_capacity_bytes: float = 0.0           # 0 = unknown, no feasibility cut
 
     def effective_peak(self, flops: float) -> float:
         """The achievable compute ceiling for an ``flops``-sized unit."""
@@ -210,6 +216,7 @@ TPU_V5E = HardwareSpec(
     hbm_bw=819e9,
     net_bw=50e9,
     extra_links={"pod": 25e9},
+    hbm_capacity_bytes=16e9,      # 16 GB HBM per v5e chip (datasheet)
 )
 
 #: Intel Xeon Cascade Lake socket exactly as in the paper's case study (§III):
@@ -220,6 +227,7 @@ CLX = HardwareSpec(
     hbm_bw=105e9,
     net_bw=12e9,
     vmem_bytes=36 * 1024 * 1024,  # LLC, unused in analysis
+    hbm_capacity_bytes=192e9,     # 6-channel DDR4 socket, 32 GB DIMMs
 )
 
 PRESETS: Dict[str, HardwareSpec] = {"tpu_v5e": TPU_V5E, "clx": CLX}
@@ -271,6 +279,12 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
             f"calibration entry {d.get('name')!r} has schema {schema!r}, "
             f"expected one of {CALIBRATION_SCHEMAS}")
     validation = d.get("validation", {}) or {}
+    # capacity passthrough: entries written before the field existed fall
+    # back to their base preset's datasheet capacity (calibration measures
+    # rates, not capacity — the committed registry never needs a rewrite)
+    base = PRESETS.get(str(d.get("base", "")))
+    capacity = d.get("hbm_capacity_bytes",
+                     base.hbm_capacity_bytes if base is not None else 0.0)
     return HardwareSpec(
         name=str(d["name"]),
         peak_flops=float(d["peak_flops"]),
@@ -286,6 +300,7 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
         model_rel_error=float(validation.get("median_abs_rel_error", 0.0)),
         compute_eff=EfficiencyModel.from_dict(d.get("compute_eff")),
         vmem_bytes=int(d.get("vmem_bytes", HardwareSpec.vmem_bytes)),
+        hbm_capacity_bytes=float(capacity),
     )
 
 

@@ -277,6 +277,35 @@ def dp_grad_sync_bytes(grad_bytes_per_chip: ArrayLike, dp: ArrayLike,
     return dp_grad_sync(grad_bytes_per_chip, dp, algorithm).wire_bytes
 
 
+def zero_dp_sync(state_bytes_per_chip: ArrayLike, dp: ArrayLike,
+                 stage: ArrayLike) -> CollectiveCost:
+    """ZeRO-sharded dp-axis traffic per step (Rajbhandari et al.).
+
+    ``state_bytes_per_chip`` is this chip's full parameter-block size (the
+    gradient block is the same size in this repo's fp32 accounting).  With
+    states sharded over dp, the ring all-reduce decomposes into its two
+    halves plus — at stage 3 — one more gather:
+
+      stage 1/2   reduce-scatter(grads) + all-gather(params)
+                  = 2 · (dp−1)/dp · bytes,  2·(dp−1) hops
+      stage 3     + a second params all-gather (forward re-gathers the
+                  shard it no longer holds)
+                  = 3 · (dp−1)/dp · bytes,  3·(dp−1) hops
+
+    Stage 1/2 wire bytes equal the plain ring all-reduce (RS+AG *is* the
+    ring), so pricing stays continuous with the zero-0 model; what changes
+    is that the algorithm is structural — sharded state cannot ride a tree
+    or bidirectional ring — so the planner pins these rows to this cost
+    instead of the α–β argmin.  ``stage`` broadcasts; stage 0 prices as
+    stage 1/2 (callers route stage-0 rows to the argmin path instead).
+    """
+    p = np.asarray(state_bytes_per_chip, dtype=np.float64)
+    n = np.asarray(dp, dtype=np.float64)
+    k = np.where(np.asarray(stage, dtype=np.float64) >= 3.0, 3.0, 2.0)
+    return CollectiveCost(k * _ring_factor(n) * p,
+                          k * np.maximum(n - 1.0, 0.0))
+
+
 def tp_act_sync(act_bytes: ArrayLike, tp: ArrayLike,
                 syncs_per_layer: ArrayLike, n_layers: ArrayLike,
                 algorithm: str = "ring") -> CollectiveCost:

@@ -53,7 +53,19 @@ CLI::
     python -m repro.launch.plan --arch dlrm-mlp --chips-grid 8,16,32,64 \\
         --batch-grid 256,512,1024 --pp 4
     python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
+    python -m repro.launch.plan --arch qwen2-7b --chips 16 --zero auto --remat
     python -m repro.launch.plan --hardware list
+
+**Memory feasibility.**  When the spec carries a per-chip
+``hbm_capacity_bytes`` (datasheet presets and calibrated entries do),
+every candidate's working set (``launch/memory``: params + grads +
+optimizer states + in-flight activations) is priced first and candidates
+that cannot fit are pruned before ranking — the planner never recommends
+a mesh that cannot hold its own state.  ``--zero auto`` (or a comma list
+of stages) searches ZeRO sharding as a candidate axis, ``--remat`` trades
+activation footprint for +1/3 recompute FLOPs, and
+``--no-capacity-check`` keeps infeasible rows marked ``fit=NO`` instead
+(the what-if view).
 
 ``--pp N`` admits pipeline axes up to N stages; ``--chips-grid`` /
 ``--batch-grid`` (comma lists) switch to grid mode: the whole scaling
@@ -78,8 +90,8 @@ from repro.distributed import collectives
 # the evaluation core + its vocabulary (re-exported: this module is the
 # stable import surface; the engine lives in plan_grid)
 from repro.launch.plan_grid import (MeshPlan, PlanGrid, POD_LINK,
-                                    feasible_meshes, param_counts,
-                                    plan_grid)
+                                    ZERO_STAGES, feasible_meshes,
+                                    param_counts, plan_grid)
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
@@ -111,7 +123,9 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
          batch: int, seq: int = 1,
          algorithms: Sequence[str] = ("auto",),
          pod_size: Optional[int] = None,
-         max_pp: int = 1) -> List[MeshPlan]:
+         max_pp: int = 1, zero_stages: Sequence[int] = (0,),
+         remat: bool = False, check_capacity: bool = True
+         ) -> List[MeshPlan]:
     """Rank every feasible (dp, tp, pp, m, algorithm) by projected step time.
 
     A single-point slice of :func:`repro.launch.plan_grid.plan_grid` (one
@@ -127,9 +141,17 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     different algorithms on the same candidate.  ``max_pp`` admits
     pipeline-parallel axes up to that many stages (1 = the classic
     dp × tp space).
+
+    ``zero_stages``/``remat``/``check_capacity`` are the memory-feasibility
+    controls (see :func:`repro.launch.plan_grid.plan_grid`): when the spec
+    carries an ``hbm_capacity_bytes``, candidates whose working set cannot
+    fit are pruned before pricing — the returned ranking never recommends
+    a mesh that cannot hold its own state.
     """
     grid = plan_grid(cfg, hw, [chips], [batch], seq=seq,
-                     algorithms=algorithms, pod_size=pod_size, max_pp=max_pp)
+                     algorithms=algorithms, pod_size=pod_size, max_pp=max_pp,
+                     zero_stages=zero_stages, remat=remat,
+                     check_capacity=check_capacity)
     return grid.plans()
 
 
@@ -171,10 +193,13 @@ def best_step_time(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
                    batch: int, seq: int = 1,
                    algorithms: Sequence[str] = ("auto",),
                    pod_size: Optional[int] = None,
-                   max_pp: int = 1) -> float:
+                   max_pp: int = 1, zero_stages: Sequence[int] = (0,),
+                   remat: bool = False,
+                   check_capacity: bool = True) -> float:
     return plan(cfg, hw, chips, batch=batch, seq=seq,
                 algorithms=algorithms, pod_size=pod_size,
-                max_pp=max_pp)[0].runtime
+                max_pp=max_pp, zero_stages=zero_stages, remat=remat,
+                check_capacity=check_capacity)[0].runtime
 
 
 def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
@@ -212,11 +237,17 @@ def _fmt_ms(s: float) -> str:
 def format_plan_table(plans: Sequence[MeshPlan]) -> str:
     banded = any(p.runtime_hi > p.runtime for p in plans)
     piped = any(p.pp > 1 for p in plans)
+    zeroed = any(p.zero_stage > 0 for p in plans)
+    capped = any(p.hbm_bytes > 0 for p in plans)
+    misfit = any(not p.fits for p in plans)
     head = (f"{'rank':>4} {'mesh':>12} "
             + (f"{'pp':>3} {'mb':>4} " if piped else "")
+            + (f"{'z':>2} " if zeroed else "")
             + f"{'algo':>10} {'t_comp ms':>9} "
             f"{'t_mem ms':>9} {'t_net ms':>9} {'step ms':>9} "
             + (f"{'band ms':>19} " if banded else "")
+            + (f"{'hbm GB':>7} " if capped else "")
+            + (f"{'fit':>4} " if misfit else "")
             + f"{'links':>9} {'bottleneck':>10} {'peak%':>6}")
     lines = [head, "-" * len(head)]
     for i, p in enumerate(plans):
@@ -227,10 +258,13 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
             f"{p.dp_link}/{p.tp_link}"
         lines.append(
             f"{i + 1:>4} {p.mesh:>12} " + pipe
+            + (f"{p.zero_stage:>2} " if zeroed else "")
             + f"{p.algo_label:>10} "
             f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
             f"{_fmt_ms(p.t_network)} {_fmt_ms(p.runtime)} "
             + band
+            + (f"{p.hbm_used_gb:7.1f} " if capped else "")
+            + (f"{'yes' if p.fits else 'NO':>4} " if misfit else "")
             + f"{link:>9} {p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
     return "\n".join(lines)
 
@@ -239,10 +273,15 @@ def format_grid_table(grid: PlanGrid, top: int = 1) -> str:
     """Grid mode: the ``top`` best plans per (chips, batch) point."""
     top = max(1, top)
     ranked = top > 1
+    zeroed = any(z > 0 for z in grid.zero_stages)
+    capped = grid.hbm_capacity_bytes > 0
     head = (f"{'chips':>6} {'batch':>7} "
             + (f"{'rank':>4} " if ranked else "")
             + f"{'mesh':>14} {'mb':>4} "
-            f"{'algo':>10} {'step ms':>9} {'bottleneck':>10} {'peak%':>6}")
+            + (f"{'z':>2} " if zeroed else "")
+            + f"{'algo':>10} {'step ms':>9} "
+            + (f"{'hbm GB':>7} " if capped else "")
+            + f"{'bottleneck':>10} {'peak%':>6}")
     lines = [head, "-" * len(head)]
     for chips in grid.chips_list:
         for batch in grid.batch_list:
@@ -251,8 +290,10 @@ def format_grid_table(grid: PlanGrid, top: int = 1) -> str:
                     f"{chips:>6} {batch:>7} "
                     + (f"{r + 1:>4} " if ranked else "")
                     + f"{p.mesh:>14} {p.microbatches:>4} "
-                    f"{p.algo_label:>10} {_fmt_ms(p.runtime)} "
-                    f"{p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
+                    + (f"{p.zero_stage:>2} " if zeroed else "")
+                    + f"{p.algo_label:>10} {_fmt_ms(p.runtime)} "
+                    + (f"{p.hbm_used_gb:7.1f} " if capped else "")
+                    + f"{p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
     return "\n".join(lines)
 
 
@@ -277,7 +318,20 @@ def format_flip_table(rows: Sequence[dict]) -> str:
 
 def _plan_dict(p: MeshPlan) -> dict:
     return {"mesh": p.mesh, "chips": p.chips,
-            "algo_label": p.algo_label, **dataclasses.asdict(p)}
+            "algo_label": p.algo_label, "hbm_used_gb": p.hbm_used_gb,
+            **dataclasses.asdict(p)}
+
+
+def _capacity_dict(grid: PlanGrid) -> dict:
+    """Machine-readable summary of the feasibility cut (JSON outputs)."""
+    return {
+        "hbm_capacity_bytes": grid.hbm_capacity_bytes,
+        "checked": grid.check_capacity,
+        "n_enumerated": grid.n_enumerated,
+        "n_pruned": int(grid.n_pruned.sum()),
+        "pruned_fraction": grid.pruned_fraction,
+        "min_zero_to_fit": grid.min_zero_to_fit.tolist(),
+    }
 
 
 def _parse_grid(arg: Optional[str], name: str) -> Optional[List[int]]:
@@ -322,6 +376,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "(one vectorized pass over every point)")
     ap.add_argument("--batch-grid", default=None,
                     help="comma list of global batches -> grid mode")
+    ap.add_argument("--zero", default="0",
+                    help="ZeRO stages to search: a comma list of 0-3, or "
+                         "'auto' (all stages; stage 1/2/3 shard optimizer "
+                         "states/gradients/parameters over dp). Default 0 "
+                         "= no sharding")
+    ap.add_argument("--remat", action="store_true",
+                    help="rematerialize activations: half the saved-"
+                         "activation footprint at +1/3 recompute FLOPs")
+    ap.add_argument("--no-capacity-check", action="store_true",
+                    help="keep candidates exceeding the spec's "
+                         "hbm_capacity_bytes (marked fit=NO) instead of "
+                         "pruning them — the what-if view")
     ap.add_argument("--algo", default="auto",
                     choices=sorted(collectives.ALGORITHM_ALIASES)
                     + list(collectives.ALGORITHMS) + ["auto", "all"],
@@ -369,6 +435,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     batch = args.batch if args.batch is not None else (
         512 if cfg.family == "mlp" else 256)
     algos = collectives.ALGORITHMS if args.algo == "all" else (args.algo,)
+    if args.zero.strip().lower() == "auto":
+        zero_stages: Tuple[int, ...] = ZERO_STAGES
+    else:
+        try:
+            zero_stages = tuple(int(v) for v in args.zero.split(",")
+                                if v.strip())
+        except ValueError:
+            ap.error(f"--zero wants 'auto' or a comma list of stages "
+                     f"0-3, got {args.zero!r}")
+        if not zero_stages:
+            ap.error("--zero is empty")
+    check_capacity = not args.no_capacity_check
 
     if grid_mode:
         try:
@@ -377,7 +455,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             batch_list = _parse_grid(args.batch_grid, "batch-grid") or [batch]
             grid = plan_grid(cfg, hw, chips_list, batch_list, seq=args.seq,
                              algorithms=algos, pod_size=args.pod_size,
-                             max_pp=args.pp)
+                             max_pp=args.pp, zero_stages=zero_stages,
+                             remat=args.remat,
+                             check_capacity=check_capacity)
         except (ValueError, KeyError) as e:
             print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
             return 2
@@ -404,6 +484,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 "seq": None if cfg.family == "mlp" else args.seq,
                 "pod_size": args.pod_size, "max_pp": args.pp,
                 "algo": args.algo, "algorithms": list(algos),
+                "zero_stages": list(grid.zero_stages),
+                "remat": grid.remat,
+                "capacity": _capacity_dict(grid),
                 "n_candidates": grid.n_candidates,
                 "flip_points": flips,
                 "hardware": {"source": "calibrated" if args.calibrated
@@ -416,8 +499,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"# {args.arch} grid on {hw.name}: "
               f"chips {list(grid.chips_list)} x batch {list(grid.batch_list)}"
               + ("" if cfg.family == "mlp" else f", seq={args.seq}")
-              + f", algo={args.algo}, max_pp={args.pp} "
-              f"({grid.n_candidates} candidates, one pass)")
+              + f", algo={args.algo}, max_pp={args.pp}"
+              + (f", zero={args.zero}" if args.zero != "0" else "")
+              + (", remat" if args.remat else "")
+              + f" ({grid.n_candidates} candidates, one pass)")
+        if grid.hbm_capacity_bytes > 0 and grid.check_capacity \
+                and grid.n_pruned.sum():
+            print(f"# capacity {grid.hbm_capacity_bytes / 1e9:.1f} GB/chip: "
+                  f"{int(grid.n_pruned.sum())} of {grid.n_enumerated} "
+                  f"candidates infeasible, pruned before pricing")
         print(format_grid_table(grid, top=args.top or 1))
         if args.algo in ("all", "auto"):
             print()
@@ -425,9 +515,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
 
     try:
-        plans = plan(cfg, hw, args.chips, batch=batch, seq=args.seq,
-                     algorithms=algos, pod_size=args.pod_size,
-                     max_pp=args.pp)
+        grid = plan_grid(cfg, hw, [args.chips], [batch], seq=args.seq,
+                         algorithms=algos, pod_size=args.pod_size,
+                         max_pp=args.pp, zero_stages=zero_stages,
+                         remat=args.remat, check_capacity=check_capacity)
+        plans = grid.plans()
         flips = flip_points(cfg, hw, args.chips, batch=batch,
                             pod_size=args.pod_size)
     except (ValueError, KeyError) as e:
@@ -443,6 +535,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             "max_pp": args.pp,
             "algo": args.algo,
             "algorithms": list(algos),
+            "zero_stages": list(grid.zero_stages),
+            "remat": grid.remat,
+            "capacity": _capacity_dict(grid),
             "flip_points": flips,
             "hardware": {"source": "calibrated" if args.calibrated
                          else list_hardware().get(hw.name, "datasheet"),
@@ -455,7 +550,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           f"batch={batch}"
           + ("" if cfg.family == "mlp" else f", seq={args.seq}")
           + f", algo={args.algo}"
-          + (f", max_pp={args.pp}" if args.pp > 1 else ""))
+          + (f", max_pp={args.pp}" if args.pp > 1 else "")
+          + (f", zero={args.zero}" if args.zero != "0" else "")
+          + (", remat" if args.remat else ""))
     print(format_plan_table(shown))
     if args.algo in ("all", "auto"):
         print()
@@ -472,9 +569,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     bubble = (f", pp{best.pp} m{best.microbatches} "
               f"({100 * best.bubble_fraction:.0f}% bubble)"
               if best.pp > 1 else "")
+    zero_note = f", ZeRO-{best.zero_stage}" if best.zero_stage else ""
     print(f"\nbest: {best.mesh} ({best.algo_label}) -> "
           f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound"
-          f"{bubble}{band}")
+          f"{zero_note}{bubble}{band}")
+    if grid.hbm_capacity_bytes > 0:
+        cap_gb = grid.hbm_capacity_bytes / 1e9
+        note = (f"capacity: best uses {best.hbm_used_gb:.1f} of "
+                f"{cap_gb:.1f} GB/chip")
+        pruned = int(grid.n_pruned.sum())
+        if pruned:
+            note += (f"; {pruned} of {grid.n_enumerated} candidates "
+                     f"infeasible, pruned")
+        k = int(grid.min_zero_to_fit[0, 0])
+        if grid.check_capacity and 0 < k <= 3:
+            note += f"; infeasible without ZeRO-{k}"
+        print(note)
     return 0
 
 

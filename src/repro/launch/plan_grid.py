@@ -46,6 +46,21 @@ all-reduce runs once per step (after the last microbatch) and is not
 bubbled.  Per-microbatch memory re-streams the stage weights
 (weights + boundary activations per traversal), which reduces exactly to
 the PR 4 accounting at pp = m = 1.
+
+**Memory feasibility (ISSUE 6).**  Before any pricing pass, every
+candidate's per-chip working set (``launch/memory``: params + grads +
+optimizer states over tp·pp, activations × in-flight 1F1B microbatches) is
+checked against ``hw.hbm_capacity_bytes``; candidates that cannot fit are
+pruned from the struct-of-arrays — they shrink every downstream broadcast
+pass instead of being ranked as "fastest".  ``zero_stages`` adds ZeRO
+sharding as a candidate axis: stage 1/2/3 shard optimizer states /
+gradients / parameters across dp, shrinking the footprint while the dp
+sync is repriced as reduce-scatter + all-gather traffic
+(``collectives.zero_dp_sync`` — structural, not an algorithm choice).
+``remat=True`` halves the saved-activation footprint at +1/3 recompute
+FLOPs.  The default ``zero_stages=(0,)``/``remat=False`` keeps the
+zero-0 slice bit-identical to the PR 4/5 goldens; a spec with capacity 0
+(unknown — every custom spec's default) disables the cut entirely.
 """
 from __future__ import annotations
 
@@ -59,6 +74,7 @@ import numpy as np
 from repro.core import sweep as sweep_mod
 from repro.core.hardware import HardwareSpec, get_hardware
 from repro.distributed import collectives
+from repro.launch import memory as memory_mod
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
@@ -71,6 +87,9 @@ _ALGO_SHORT = {"ring": "ring", "bidir_ring": "bidir", "tree": "tree"}
 
 #: mesh-axis tag of the inter-pod link in ``HardwareSpec.extra_links``
 POD_LINK = "pod"
+
+#: the ZeRO stages a candidate axis may take (0 = unsharded states)
+ZERO_STAGES = (0, 1, 2, 3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,10 +120,20 @@ class MeshPlan:
     pp: int = 1                  # pipeline stages (1 = no pipeline axis)
     microbatches: int = 1        # 1F1B microbatch count m
     pp_link: str = "ici"         # link the pp boundary p2p rides
+    zero_stage: int = 0          # ZeRO: 1/2/3 shard opt/grads/params over dp
+    hbm_bytes: float = 0.0       # modeled per-chip working set
+    fits: bool = True            # hbm_bytes <= hw.hbm_capacity_bytes (or
+    #                              the spec carries no capacity: trivially True)
+    remat: bool = False          # activations rematerialized (+1/3 FLOPs)
 
     @property
     def chips(self) -> int:
         return self.dp * self.tp * self.pp
+
+    @property
+    def hbm_used_gb(self) -> float:
+        """The working set in decimal gigabytes (display convenience)."""
+        return self.hbm_bytes / 1e9
 
     @property
     def mesh(self) -> str:
@@ -173,12 +202,33 @@ def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
     return exact(cfg)
 
 
+def _tp_ok(tp: int, width: int, n_heads: int, n_kv_heads: int) -> bool:
+    """Can a tp-way split actually shard the model (integer form)?
+
+    Beyond ``tp | width``, attention models split Megatron-TP by *heads*:
+    tp must divide ``n_heads``, and — where GQA defines a smaller KV head
+    count — ``n_kv_heads`` too, or the sharding layer
+    (``launch/dryrun._rules_for`` / ``distributed.sharding.gqa_safe_rules``)
+    falls back to a different layout than the one the planner prices.
+    Head-less families (``n_heads == 0``, e.g. the MLP tower) only need
+    the width check.
+    """
+    if width % tp:
+        return False
+    if tp <= 1 or not n_heads:
+        return True
+    if n_heads % tp:
+        return False
+    return not (0 < n_kv_heads < n_heads and n_kv_heads % tp)
+
+
 def feasible_meshes(cfg: ModelConfig, chips: int,
                     batch: int) -> List[Tuple[int, int]]:
-    """(dp, tp) with dp·tp == chips, dp | batch and tp | model width."""
+    """(dp, tp) with dp·tp == chips, dp | batch, tp | width (and heads)."""
     width = _model_width(cfg)
     return [(dp, tp) for dp, tp in _factor_pairs(chips)
-            if batch % dp == 0 and width % tp == 0]
+            if batch % dp == 0
+            and _tp_ok(tp, width, cfg.n_heads, cfg.n_kv_heads)]
 
 
 def pp_choices(cfg: ModelConfig, chips: int, max_pp: int) -> List[int]:
@@ -188,16 +238,21 @@ def pp_choices(cfg: ModelConfig, chips: int, max_pp: int) -> List[int]:
 
 
 def microbatch_choices(batch_per_dp: int, pp: int) -> Tuple[int, ...]:
-    """1F1B microbatch counts m: divisors of the per-dp batch.
+    """1F1B microbatch counts m: divisors of the per-dp batch with m ≥ pp.
 
     A pp = 1 candidate has no pipeline to fill, so splitting the batch
     only adds dispatch α without changing any bandwidth term — m is
     pinned to 1 there (which is also what keeps the pp = 1 slice
-    bit-identical to the pre-grid planner).
+    bit-identical to the pre-grid planner).  For pp > 1, m < pp describes
+    a pipeline that never fills — the 1F1B schedule holds
+    ``m + pp − 1`` slots but fewer than pp stages ever run concurrently,
+    and the fill algebra would price phantom overlap — so those divisors
+    are excluded (possibly leaving no choice at all, which removes the
+    (dp, pp) pair from the candidate space).
     """
     if pp <= 1:
         return (1,)
-    return _divisors(batch_per_dp)
+    return tuple(m for m in _divisors(batch_per_dp) if m >= pp)
 
 
 # --- the broadcast evaluation core --------------------------------------------
@@ -223,6 +278,10 @@ class PlanGrid:
     pod_size: Optional[int]
     max_pp: int
     algorithms: Tuple[str, ...]          # requested, raw (may include "auto")
+    zero_stages: Tuple[int, ...]         # searched ZeRO stages
+    remat: bool
+    hbm_capacity_bytes: float            # the budget candidates were cut by
+    check_capacity: bool                 # False: infeasible rows kept, marked
 
     chips_idx: np.ndarray                # int, index into chips_list
     batch_idx: np.ndarray                # int, index into batch_list
@@ -230,6 +289,7 @@ class PlanGrid:
     tp: np.ndarray
     pp: np.ndarray
     microbatches: np.ndarray
+    zero: np.ndarray                     # per-candidate ZeRO stage
     req_idx: np.ndarray                  # index into `algorithms`
     dp_algo_idx: np.ndarray              # into collectives.ALGORITHMS
     tp_algo_idx: np.ndarray
@@ -250,9 +310,24 @@ class PlanGrid:
     runtime_lo: np.ndarray
     runtime_hi: np.ndarray
 
+    hbm_bytes: np.ndarray                # per-candidate working set (memory.py)
+    fits: np.ndarray                     # bool; all True after a capacity cut
+    n_enumerated: int                    # candidates before the capacity cut
+    n_pruned: np.ndarray                 # (n_chips, n_batch) cut per point
+    min_zero_to_fit: np.ndarray          # (n_chips, n_batch) smallest surviving
+    #                                      ZeRO stage per point (the
+    #                                      "infeasible without ZeRO-k" k)
+
     @property
     def n_candidates(self) -> int:
         return int(self.runtime.size)
+
+    @property
+    def pruned_fraction(self) -> float:
+        """Share of enumerated candidates the capacity mask removed."""
+        if self.n_enumerated <= 0:
+            return 0.0
+        return 1.0 - self.n_candidates / self.n_enumerated
 
     def labels(self) -> np.ndarray:
         return sweep_mod._LABELS[self.bottleneck]
@@ -271,6 +346,7 @@ class PlanGrid:
 
     def _mesh_plan(self, i: int) -> MeshPlan:
         dp, tp, pp = int(self.dp[i]), int(self.tp[i]), int(self.pp[i])
+        zero = int(self.zero[i])
         algs = collectives.ALGORITHMS
         return MeshPlan(
             dp=dp, tp=tp,
@@ -287,25 +363,31 @@ class PlanGrid:
             net_steps=float(self.net_steps[i]),
             dp_link=POD_LINK if self.dp_pod[i] else "ici",
             tp_link=POD_LINK if self.tp_pod[i] else "ici",
-            dp_algo="-" if dp <= 1 else algs[int(self.dp_algo_idx[i])],
+            # ZeRO's RS+AG dp sync is structural, not an algorithm choice
+            dp_algo="-" if dp <= 1 else
+            ("rs+ag" if zero >= 1 else algs[int(self.dp_algo_idx[i])]),
             tp_algo="-" if tp <= 1 else algs[int(self.tp_algo_idx[i])],
             runtime_lo=float(self.runtime_lo[i]),
             runtime_hi=float(self.runtime_hi[i]),
             pp=pp, microbatches=int(self.microbatches[i]),
-            pp_link=POD_LINK if self.pp_pod[i] else "ici")
+            pp_link=POD_LINK if self.pp_pod[i] else "ici",
+            zero_stage=zero, hbm_bytes=float(self.hbm_bytes[i]),
+            fits=bool(self.fits[i]), remat=self.remat)
 
     def plans(self, chips: Optional[int] = None,
               batch: Optional[int] = None) -> List[MeshPlan]:
         """Ranked candidates of one grid point (runtime, then smaller tp)."""
         idx = self.point_indices(chips, batch)
         order = sorted(idx.tolist(),
-                       key=lambda i: (self.runtime[i], self.tp[i]))
+                       key=lambda i: (self.runtime[i], self.tp[i],
+                                      self.zero[i]))
         return [self._mesh_plan(i) for i in order]
 
     def best(self, chips: Optional[int] = None,
              batch: Optional[int] = None) -> MeshPlan:
         idx = self.point_indices(chips, batch)
-        i = min(idx.tolist(), key=lambda i: (self.runtime[i], self.tp[i]))
+        i = min(idx.tolist(), key=lambda i: (self.runtime[i], self.tp[i],
+                                             self.zero[i]))
         return self._mesh_plan(i)
 
     def best_runtime_grid(self) -> np.ndarray:
@@ -316,15 +398,16 @@ class PlanGrid:
 
 
 @functools.lru_cache(maxsize=4096)
-def _point_candidates(width: int, n_layers: int, chips: int, batch: int,
+def _point_candidates(width: int, n_heads: int, n_kv_heads: int,
+                      n_layers: int, chips: int, batch: int,
                       max_pp: int) -> Tuple[np.ndarray, ...]:
     """(dp, tp, pp, m) arrays for one grid point — pure integer work.
 
     Keyed on the integers that actually determine feasibility (model
-    width, layer count, chip budget, batch, pp cap), so repeated grid
-    points — N ``plan()`` calls over the same configs, or overlapping
-    grids — enumerate once per process.  Callers must treat the returned
-    arrays as immutable (they are shared cache entries).
+    width, head counts, layer count, chip budget, batch, pp cap), so
+    repeated grid points — N ``plan()`` calls over the same configs, or
+    overlapping grids — enumerate once per process.  Callers must treat
+    the returned arrays as immutable (they are shared cache entries).
     """
     dp_l: List[int] = []
     tp_l: List[int] = []
@@ -334,7 +417,7 @@ def _point_candidates(width: int, n_layers: int, chips: int, batch: int,
         if pp > max_pp or n_layers % pp:
             continue
         for dp, tp in _factor_pairs(chips // pp):
-            if batch % dp or width % tp:
+            if batch % dp or not _tp_ok(tp, width, n_heads, n_kv_heads):
                 continue
             for m in microbatch_choices(batch // dp, pp):
                 dp_l.append(dp)
@@ -349,49 +432,97 @@ def _point_candidates(width: int, n_layers: int, chips: int, batch: int,
 
 def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
                           batch_list: Sequence[int], max_pp: int,
-                          algo_codes: Sequence[int]
+                          algo_codes: Sequence[int],
+                          zero_stages: Sequence[int] = (0,)
                           ) -> Dict[str, np.ndarray]:
     """Flat candidate index arrays over the whole grid.
 
     Per-point enumeration is cached integer bookkeeping
-    (:func:`_point_candidates`); the algorithm axis and the grid-point
-    index columns are tiled on with numpy, so the warm path does no
-    per-candidate Python at all.  Raises when a grid point has no
-    feasible mesh, naming the point.
+    (:func:`_point_candidates`); the ZeRO axis, the algorithm axis, and
+    the grid-point index columns are tiled on with numpy, so the warm
+    path does no per-candidate Python at all.  Ordering is mesh-major,
+    zero-middle, algorithm-minor; a zero > 0 row with dp == 1 would be
+    numerically identical to its zero = 0 twin (nothing to shard over a
+    size-1 axis), so those duplicates are dropped here.  Raises when a
+    grid point has no feasible mesh, naming the point.
     """
     width = _model_width(cfg)
     n_req = len(algo_codes)
     req_range = np.arange(n_req, dtype=np.intp)
-    cols: List[List[np.ndarray]] = [[] for _ in range(7)]
+    zs = np.asarray(zero_stages, dtype=np.int64)
+    cols: List[List[np.ndarray]] = [[] for _ in range(8)]
     for ci, chips in enumerate(chips_list):
         for bi, batch in enumerate(batch_list):
             dp_a, tp_a, pp_a, m_a = _point_candidates(
-                width, cfg.n_layers, int(chips), int(batch), max_pp)
+                width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,
+                int(chips), int(batch), max_pp)
             if dp_a.size == 0:
                 raise ValueError(
                     f"no feasible (dp, tp, pp) for chips={chips}, "
-                    f"batch={batch}, width={width}")
-            n = dp_a.size * n_req
+                    f"batch={batch}, width={width}"
+                    + (f" (tp must divide n_heads={cfg.n_heads}"
+                       + (f", n_kv_heads={cfg.n_kv_heads}"
+                          if 0 < cfg.n_kv_heads < cfg.n_heads else "")
+                       + ")" if cfg.n_heads else ""))
+            # cross mesh rows with the ZeRO axis, dropping dp = 1 dupes
+            dp_z = np.repeat(dp_a, zs.size)
+            z_col = np.tile(zs, dp_a.size)
+            keep = (dp_z > 1) | (z_col == zs[0]) \
+                if (zs > 0).any() else slice(None)
+            dp_z = dp_z[keep]
+            tp_z = np.repeat(tp_a, zs.size)[keep]
+            pp_z = np.repeat(pp_a, zs.size)[keep]
+            m_z = np.repeat(m_a, zs.size)[keep]
+            z_col = z_col[keep]
+            n = dp_z.size * n_req
             cols[0].append(np.full(n, ci, dtype=np.intp))
             cols[1].append(np.full(n, bi, dtype=np.intp))
             # mesh-major, algorithm-minor — the scalar planner's order
-            cols[2].append(np.repeat(dp_a, n_req))
-            cols[3].append(np.repeat(tp_a, n_req))
-            cols[4].append(np.repeat(pp_a, n_req))
-            cols[5].append(np.repeat(m_a, n_req))
-            cols[6].append(np.tile(req_range, dp_a.size))
+            cols[2].append(np.repeat(dp_z, n_req))
+            cols[3].append(np.repeat(tp_z, n_req))
+            cols[4].append(np.repeat(pp_z, n_req))
+            cols[5].append(np.repeat(m_z, n_req))
+            cols[6].append(np.repeat(z_col, n_req))
+            cols[7].append(np.tile(req_range, dp_z.size))
     names = ("chips_idx", "batch_idx", "dp", "tp", "pp", "microbatches",
-             "req_idx")
+             "zero", "req_idx")
     return {name: np.concatenate(parts)
             for name, parts in zip(names, cols)}
+
+
+def _capacity_error(cfg: ModelConfig, capacity: float, chips: int,
+                    batch: int, seq: int, max_pp: int, remat: bool,
+                    zero_stages: Sequence[int]) -> ValueError:
+    """Actionable error for a grid point the capacity cut emptied."""
+    width = _model_width(cfg)
+    dp_a, tp_a, pp_a, m_a = _point_candidates(
+        width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,
+        int(chips), int(batch), max_pp)
+    need = memory_mod.min_zero_stage(
+        cfg, capacity, batch=batch, seq=seq, dp=dp_a, tp=tp_a, pp=pp_a,
+        microbatches=m_a, remat=remat)
+    k = int(need.min()) if need.size else 4
+    if k <= 3:
+        hint = (f"infeasible without ZeRO-{k}: pass zero_stages "
+                f"including {k} (CLI: --zero auto)")
+    else:
+        hint = ("no candidate fits even at ZeRO-3; try remat=True, "
+                "more chips, or a smaller batch")
+    return ValueError(
+        f"no candidate fits in hbm_capacity_bytes={capacity:.3g} for "
+        f"chips={chips}, batch={batch} "
+        f"(searched zero_stages={tuple(zero_stages)}, remat={remat}) — "
+        + hint)
 
 
 def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
               chips_list: Sequence[int], batch_list: Sequence[int], *,
               seq: int = 1, algorithms: Sequence[str] = ("auto",),
-              pod_size: Optional[int] = None, max_pp: int = 1) -> PlanGrid:
-    """Evaluate every (dp × tp × pp) × m × algorithm × batch × chips
-    candidate in one broadcast pass.
+              pod_size: Optional[int] = None, max_pp: int = 1,
+              zero_stages: Sequence[int] = (0,), remat: bool = False,
+              check_capacity: bool = True) -> PlanGrid:
+    """Evaluate every (dp × tp × pp) × m × zero × algorithm × batch ×
+    chips candidate in one broadcast pass.
 
     ``algorithms`` entries are concrete collective tags (including the
     ``bidir`` alias) or ``"auto"`` (per-axis α–β argmin over the full
@@ -400,6 +531,18 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     space bit-for-bit; larger values add every pipeline size that divides
     both the chip budget and ``cfg.n_layers``, crossed with every 1F1B
     microbatch count dividing the per-dp batch.
+
+    ``zero_stages`` adds ZeRO sharding stages as a candidate axis (the
+    default ``(0,)`` searches none); ``remat=True`` rematerializes
+    activations everywhere (half the saved-activation footprint, +1/3
+    FLOPs).  When the spec carries a positive ``hbm_capacity_bytes`` and
+    ``check_capacity`` is True, every candidate's working set
+    (``launch/memory``) is priced first and infeasible candidates are
+    pruned *before* the broadcast pricing passes; a grid point left with
+    no feasible candidate raises a ValueError naming the point and the
+    smallest ZeRO stage (or remat) that would save it.
+    ``check_capacity=False`` keeps infeasible rows, merely marking
+    ``fits``/``hbm_bytes`` — the what-if view.
     """
     if isinstance(hw, str):
         hw = get_hardware(hw)
@@ -407,19 +550,59 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         raise ValueError("chips_list and batch_list must be non-empty")
     if not algorithms:
         raise ValueError("need at least one algorithm (or 'auto')")
+    if not zero_stages:
+        raise ValueError("need at least one ZeRO stage (0 = unsharded)")
+    bad = [z for z in zero_stages if z not in ZERO_STAGES]
+    if bad:
+        raise ValueError(f"unknown ZeRO stage(s) {bad}; valid: "
+                         f"{ZERO_STAGES}")
     menu = collectives.ALGORITHMS
     algo_codes = [-1 if a == "auto"
                   else menu.index(collectives.canonical_algorithm(a))
                   for a in algorithms]
 
     cand = _enumerate_candidates(cfg, chips_list, batch_list, max_pp,
-                                 algo_codes)
+                                 algo_codes, tuple(int(z) for z in
+                                                   zero_stages))
+    n_enumerated = int(cand["dp"].size)
+    point_shape = (len(chips_list), len(batch_list))
+    n_pruned = np.zeros(point_shape, dtype=np.int64)
+
+    # --- memory feasibility: price the working set, cut before pricing -------
+    capacity = float(hw.hbm_capacity_bytes)
+    batch_arr = np.asarray(batch_list, dtype=np.float64)
+    hbm = memory_mod.training_working_set(
+        cfg, batch=batch_arr[cand["batch_idx"]], seq=seq,
+        dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
+        microbatches=cand["microbatches"], zero_stage=cand["zero"],
+        remat=remat).total
+    fits = hbm <= capacity if capacity > 0 else \
+        np.ones(hbm.shape, dtype=bool)
+    if check_capacity and capacity > 0 and not fits.all():
+        np.add.at(n_pruned, (cand["chips_idx"][~fits],
+                             cand["batch_idx"][~fits]), 1)
+        survivors = np.zeros(point_shape, dtype=np.int64)
+        np.add.at(survivors, (cand["chips_idx"], cand["batch_idx"]),
+                  fits.astype(np.int64))
+        if (survivors == 0).any():
+            ci, bi = np.argwhere(survivors == 0)[0]
+            raise _capacity_error(cfg, capacity, chips_list[ci],
+                                  batch_list[bi], seq, max_pp, remat,
+                                  zero_stages)
+        cand = {k: v[fits] for k, v in cand.items()}
+        hbm = hbm[fits]
+        fits = np.ones(hbm.shape, dtype=bool)
+    min_zero_to_fit = np.full(point_shape, np.iinfo(np.int64).max)
+    np.minimum.at(min_zero_to_fit, (cand["chips_idx"], cand["batch_idx"]),
+                  np.where(fits, cand["zero"], np.iinfo(np.int64).max))
+
     dp = cand["dp"].astype(np.float64)
     tp = cand["tp"].astype(np.float64)
     pp = cand["pp"].astype(np.float64)
     m = cand["microbatches"].astype(np.float64)
+    zero = cand["zero"]
     code = np.asarray(algo_codes, dtype=np.int64)[cand["req_idx"]]
-    batch = np.asarray(batch_list, dtype=np.float64)[cand["batch_idx"]]
+    batch = batch_arr[cand["batch_idx"]]
 
     n_total, n_active = param_counts(cfg)
     width = _model_width(cfg)
@@ -430,6 +613,8 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
 
     # --- per-candidate work terms (step- and microbatch-level) ---------------
     flops_step = 6.0 * n_active * tokens / (dp * tp * pp)
+    if remat:   # backward recomputes the forward: 6·N·tokens → 8·N·tokens
+        flops_step = flops_step * memory_mod.REMAT_FLOPS_FACTOR
     flops_mb = flops_step / m
     act_bytes = (tokens / dp) * width * act_dtype   # one boundary activation
     act_mb = act_bytes / m
@@ -466,6 +651,14 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         params_bytes / (tp * pp), dp, dp_bw, dp_alpha, menu, allowed=allowed)
     tp_wire, tp_steps, tp_sel = collectives.best_all_reduce_grid(
         act_mb, tp, tp_bw, tp_alpha, menu, allowed=allowed)
+    # ZeRO rows pin the dp sync to the structural RS+AG schedule — the
+    # np.where overlay leaves every zero = 0 element bit-untouched, and
+    # the guard skips the pass entirely on the default (0,) search
+    zmask = zero >= 1
+    if zmask.any():
+        zcost = collectives.zero_dp_sync(params_bytes / (tp * pp), dp, zero)
+        dp_wire = np.where(zmask, zcost.wire_bytes, dp_wire)
+        dp_steps = np.where(zmask, zcost.steps, dp_steps)
     dp_time = dp_alpha * dp_steps + dp_wire / dp_bw
     tp_scale = syncs * stage_layers                 # syncs per microbatch
     tp_wire_mb = tp_scale * tp_wire
@@ -505,9 +698,12 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         batch_list=tuple(int(b) for b in batch_list),
         seq=seq, pod_size=pod_size, max_pp=max_pp,
         algorithms=tuple(algorithms),
+        zero_stages=tuple(int(z) for z in zero_stages), remat=remat,
+        hbm_capacity_bytes=capacity, check_capacity=check_capacity,
         chips_idx=cand["chips_idx"], batch_idx=cand["batch_idx"],
         dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
-        microbatches=cand["microbatches"], req_idx=cand["req_idx"],
+        microbatches=cand["microbatches"], zero=cand["zero"],
+        req_idx=cand["req_idx"],
         dp_algo_idx=dp_sel, tp_algo_idx=tp_sel,
         dp_pod=dp_pod, tp_pod=tp_pod, pp_pod=pp_pod,
         flops=flops_step, mem_bytes=m * mem_mb,
@@ -518,4 +714,6 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         bottleneck=res.bottleneck,
         peak_fraction=sweep_mod._safe_div(attained, hw.peak_flops),
         runtime_lo=np.maximum(res.runtime * (1.0 - err), 0.0),
-        runtime_hi=res.runtime * (1.0 + err))
+        runtime_hi=res.runtime * (1.0 + err),
+        hbm_bytes=hbm, fits=fits, n_enumerated=n_enumerated,
+        n_pruned=n_pruned, min_zero_to_fit=min_zero_to_fit)

@@ -342,6 +342,7 @@ class Calibration:
             model_rel_error=summary["median_abs_rel_error"],
             compute_eff=self.compute_eff,
             vmem_bytes=self.base.vmem_bytes,
+            hbm_capacity_bytes=self.base.hbm_capacity_bytes,
         )
 
     # ---- model-vs-measured error --------------------------------------------
@@ -405,6 +406,7 @@ class Calibration:
             "extra_links": dict(self.spec().extra_links),
             "link_alphas": dict(self.link_alphas),
             "vmem_bytes": self.base.vmem_bytes,
+            "hbm_capacity_bytes": self.base.hbm_capacity_bytes,
             "sources": dict(self.sources),
             "datasheet": {"peak_flops": self.base.peak_flops,
                           "hbm_bw": self.base.hbm_bw,

@@ -362,7 +362,10 @@ class TestPlannerAlgoSelection:
         selects tree below the flip payload (tiny per-sync act payloads)
         and a ring algorithm above it (the 7B-param grad sync)."""
         from repro.launch.plan import flip_points, plan
-        cfg = self._cfg("qwen2-7b")
+        # 32 MHA heads (vs the shipped 28/4 GQA) so tp = 16 stays a
+        # head-safe split under the ISSUE 6 divisibility fix — the test
+        # pins algorithm selection, not head feasibility
+        cfg = self._cfg("qwen2-7b").replace(n_heads=32, n_kv_heads=32)
         # small global batch -> sub-MB per-sync act payloads on the tp axis
         plans = plan(cfg, ALPHA_CAL, 32, batch=16, seq=16)
         by_mesh = {p.mesh: p for p in plans}
@@ -427,14 +430,19 @@ class TestPlannerAlgoSelection:
 GOLDEN_TOP_KEYS = {"arch", "chips", "batch", "seq", "pod_size", "algo",
                    "algorithms", "flip_points", "hardware", "plans", "best",
                    # ISSUE 5: the pipeline-parallel third axis
-                   "max_pp"}
+                   "max_pp",
+                   # ISSUE 6: ZeRO search space + the capacity-cut summary
+                   "zero_stages", "remat", "capacity"}
 GOLDEN_PLAN_KEYS = {"mesh", "chips", "algo_label", "dp", "tp", "algorithm",
                     "flops", "mem_bytes", "net_bytes", "t_compute",
                     "t_memory", "t_network", "runtime", "bottleneck",
                     "peak_fraction", "net_steps", "dp_link", "tp_link",
                     "dp_algo", "tp_algo", "runtime_lo", "runtime_hi",
                     # ISSUE 5: pp axis + 1F1B microbatching ride along
-                    "pp", "microbatches", "pp_link"}
+                    "pp", "microbatches", "pp_link",
+                    # ISSUE 6: memory feasibility rides along
+                    "zero_stage", "hbm_bytes", "hbm_used_gb", "fits",
+                    "remat"}
 GOLDEN_FLIP_KEYS = {"axis", "group_size", "link", "bandwidth", "alpha",
                     "flip_payload_bytes", "small_payload_algo",
                     "large_payload_algo"}

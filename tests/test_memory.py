@@ -1,0 +1,242 @@
+"""ISSUE 6 tests: the per-chip working-set model (``launch/memory``).
+
+Three layers:
+
+  * closed-form accounting: the training footprint decomposes into
+    exactly 4/4/8 bytes per (tp·pp-sharded) parameter for params /
+    grads / AdamW states — pinned against the eval_shape-exact
+    ``param_counts`` for attention models and the by-hand closed form
+    for the MLP tower;
+  * properties (hypothesis via ``tests/_hypothesis_compat``): the
+    vectorized broadcast path agrees elementwise with scalar calls on
+    random candidate grids, ZeRO stages are monotone (stage k+1 never
+    needs more memory than stage k, strictly less when dp > 1), and
+    ``min_zero_stage`` returns the first fitting stage;
+  * the remat and decode models: remat exactly halves the saved
+    activations, decode carries bf16 weights + the KV cache and nothing
+    else.
+"""
+import numpy as np
+import pytest
+
+from repro.launch import memory as mem
+from repro.launch.plan_grid import param_counts
+from tests._hypothesis_compat import given, settings, st
+
+
+def _cfg(name="qwen2-7b"):
+    from repro.configs import get_config
+    return get_config(name)
+
+
+# --- closed-form accounting ---------------------------------------------------
+
+
+class TestTrainingAccounting:
+    def test_state_bytes_per_param_pinned(self):
+        """Unsharded single chip: params 4 B, grads 4 B, AdamW μ+ν 8 B
+        per parameter — 16 B/param total, the fp32-master accounting of
+        ``optim/optimizer``."""
+        for name in ("dlrm-mlp", "qwen2-7b"):
+            cfg = _cfg(name)
+            n_total, _ = param_counts(cfg)
+            ws = mem.training_working_set(cfg, batch=1)
+            assert float(ws.params) == 4.0 * n_total
+            assert float(ws.grads) == 4.0 * n_total
+            assert float(ws.opt) == 8.0 * n_total
+            assert float(ws.kv_cache) == 0.0
+            assert float(ws.total) == pytest.approx(
+                16.0 * n_total + float(ws.activations))
+
+    def test_mlp_closed_form_footprint(self):
+        """The MLP tower's whole footprint, restated by hand: 16 B/param
+        plus 2 saved fp32 boundary tensors per layer."""
+        cfg = _cfg("dlrm-mlp")
+        n_total, _ = param_counts(cfg)
+        batch, width = 512, cfg.mlp_widths[0]
+        ws = mem.training_working_set(cfg, batch=batch)
+        want_acts = 2.0 * cfg.n_layers * batch * width * 4.0
+        assert float(ws.activations) == want_acts
+        assert float(ws.total) == 16.0 * n_total + want_acts
+
+    def test_model_sharding_divides_state(self):
+        cfg = _cfg()
+        base = mem.training_working_set(cfg, batch=8, seq=128)
+        shard = mem.training_working_set(cfg, batch=8, seq=128, tp=2, pp=2)
+        assert float(shard.params) == float(base.params) / 4.0
+        assert float(shard.grads) == float(base.grads) / 4.0
+        assert float(shard.opt) == float(base.opt) / 4.0
+
+    def test_zero_stages_shard_exactly_their_state(self):
+        cfg = _cfg()
+        dp = 4
+        z0, z1, z2, z3 = (
+            mem.training_working_set(cfg, batch=8, seq=128, dp=dp,
+                                     zero_stage=z) for z in range(4))
+        assert float(z1.opt) == float(z0.opt) / dp
+        assert float(z1.params) == float(z0.params)
+        assert float(z1.grads) == float(z0.grads)
+        assert float(z2.grads) == float(z0.grads) / dp
+        assert float(z2.params) == float(z0.params)
+        assert float(z3.params) == float(z0.params) / dp
+        # activations are already dp-sharded, untouched by ZeRO
+        for z in (z1, z2, z3):
+            assert float(z.activations) == float(z0.activations)
+
+    def test_remat_halves_saved_activations_only(self):
+        cfg = _cfg()
+        kw = dict(batch=8, seq=256, dp=2, tp=2)
+        full = mem.training_working_set(cfg, **kw)
+        rem = mem.training_working_set(cfg, remat=True, **kw)
+        assert float(rem.activations) == float(full.activations) / 2.0
+        assert float(rem.params) == float(full.params)
+        assert float(rem.opt) == float(full.opt)
+        assert mem.REMAT_FLOPS_FACTOR == pytest.approx(4.0 / 3.0)
+
+    def test_inflight_microbatches_cap_at_pp(self):
+        """1F1B holds min(m, pp) microbatches of activations in flight:
+        splitting the batch further than pp frees memory, beyond that
+        the in-flight count saturates."""
+        cfg = _cfg("dlrm-mlp")              # n_layers = 8
+        kw = dict(batch=512, pp=4)
+        a4 = float(mem.training_working_set(cfg, microbatches=4,
+                                            **kw).activations)
+        a8 = float(mem.training_working_set(cfg, microbatches=8,
+                                            **kw).activations)
+        a16 = float(mem.training_working_set(cfg, microbatches=16,
+                                             **kw).activations)
+        assert a8 == a4 / 2.0               # m above pp keeps shrinking...
+        assert a16 == a4 / 4.0
+        a1 = float(mem.training_working_set(cfg, microbatches=1,
+                                            **kw).activations)
+        a2 = float(mem.training_working_set(cfg, microbatches=2,
+                                            **kw).activations)
+        # ...but m below pp holds every microbatch it has: same bytes
+        assert a1 == a2 == a4
+
+
+# --- vectorized path ≡ scalar reference on random grids -----------------------
+
+
+class TestVectorizedAgreesWithScalar:
+    @settings(max_examples=30)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           n=st.integers(min_value=1, max_value=40),
+           remat=st.booleans())
+    def test_property_elementwise(self, seed, n, remat):
+        cfg = _cfg()
+        rng = np.random.RandomState(seed)
+        dp = 2 ** rng.randint(0, 5, size=n)
+        tp = rng.choice([1, 2, 4], size=n)
+        pp = rng.choice([1, 2, 4, 7], size=n)
+        m = pp * 2 ** rng.randint(0, 3, size=n)
+        zero = rng.randint(0, 4, size=n)
+        batch = (dp * 2 ** rng.randint(0, 4, size=n)).astype(np.int64)
+        vec = mem.training_working_set(
+            cfg, batch=batch, seq=128, dp=dp, tp=tp, pp=pp, microbatches=m,
+            zero_stage=zero, remat=remat).total
+        assert vec.shape == (n,)
+        for i in range(n):
+            scalar = mem.training_working_set(
+                cfg, batch=int(batch[i]), seq=128, dp=int(dp[i]),
+                tp=int(tp[i]), pp=int(pp[i]), microbatches=int(m[i]),
+                zero_stage=int(zero[i]), remat=remat).total
+            assert float(vec[i]) == float(scalar)
+
+    @settings(max_examples=30)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           cap_gb=st.floats(min_value=0.5, max_value=200.0))
+    def test_property_mask_equals_scalar_reference(self, seed, cap_gb):
+        """The planner's feasibility mask on a random candidate set is
+        exactly the per-candidate scalar comparison."""
+        cfg = _cfg()
+        rng = np.random.RandomState(seed)
+        n = 32
+        dp = 2 ** rng.randint(0, 4, size=n)
+        tp = rng.choice([1, 2, 4], size=n)
+        zero = rng.randint(0, 4, size=n)
+        batch = dp * 2 ** rng.randint(0, 6, size=n)
+        cap = cap_gb * 1e9
+        total = mem.training_working_set(
+            cfg, batch=batch, seq=512, dp=dp, tp=tp,
+            zero_stage=zero).total
+        mask = total <= cap
+        for i in range(n):
+            want = float(mem.training_working_set(
+                cfg, batch=int(batch[i]), seq=512, dp=int(dp[i]),
+                tp=int(tp[i]), zero_stage=int(zero[i])).total) <= cap
+            assert bool(mask[i]) == want
+
+
+# --- ZeRO monotonicity and min_zero_stage -------------------------------------
+
+
+class TestZeroMonotonicity:
+    @settings(max_examples=40)
+    @given(dp=st.sampled_from([1, 2, 4, 8, 16]),
+           tp=st.sampled_from([1, 2, 4]),
+           batch_per_dp=st.integers(min_value=1, max_value=64))
+    def test_property_higher_stage_never_needs_more(self, dp, tp,
+                                                    batch_per_dp):
+        cfg = _cfg()
+        totals = [float(mem.training_working_set(
+            cfg, batch=dp * batch_per_dp, seq=128, dp=dp, tp=tp,
+            zero_stage=z).total) for z in range(4)]
+        for lo, hi in zip(totals[1:], totals[:-1]):
+            assert lo <= hi
+        if dp > 1:
+            assert totals[3] < totals[0]    # ZeRO-3 strictly shrinks
+        else:
+            assert totals == [totals[0]] * 4    # nothing to shard over
+
+    def test_min_zero_stage_is_first_fit(self):
+        cfg = _cfg()
+        kw = dict(batch=8, seq=128, dp=4, tp=4)
+        totals = [float(mem.training_working_set(cfg, zero_stage=z,
+                                                 **kw).total)
+                  for z in range(4)]
+        for z in range(4):
+            cap = totals[z] * 1.001
+            got = int(mem.min_zero_stage(cfg, cap, **kw))
+            want = min(s for s in range(4) if totals[s] <= cap)
+            assert got == want
+        assert int(mem.min_zero_stage(cfg, totals[3] * 0.5, **kw)) == 4
+        assert int(mem.min_zero_stage(cfg, 0.0, **kw)) == 0   # unknown cap
+
+    def test_min_zero_stage_vectorizes(self):
+        cfg = _cfg()
+        got = mem.min_zero_stage(cfg, 16e9, batch=8, seq=128,
+                                 dp=np.array([4, 8, 1]),
+                                 tp=np.array([4, 2, 1]))
+        assert got.shape == (3,)
+        assert got.dtype == np.int64
+        assert int(got[2]) == 4             # one chip can never fit 7B
+
+
+# --- decode (serving) footprint -----------------------------------------------
+
+
+class TestDecodeWorkingSet:
+    def test_bf16_weights_plus_kv_cache(self):
+        cfg = _cfg()
+        n_total, _ = param_counts(cfg)
+        batch, seq = 16, 1024
+        ws = mem.decode_working_set(cfg, batch=batch, seq=seq)
+        assert float(ws.params) == 2.0 * n_total
+        want_kv = cfg.n_layers * batch * seq * 2.0 * cfg.kv_dim * 2.0
+        assert float(ws.kv_cache) == want_kv
+        assert float(ws.grads) == float(ws.opt) == 0.0
+        assert float(ws.activations) == 0.0
+
+    def test_kv_cache_shards_over_every_axis(self):
+        cfg = _cfg()
+        base = mem.decode_working_set(cfg, batch=16, seq=1024)
+        shard = mem.decode_working_set(cfg, batch=16, seq=1024,
+                                       dp=2, tp=2, pp=2)
+        assert float(shard.kv_cache) == float(base.kv_cache) / 8.0
+        assert float(shard.params) == float(base.params) / 4.0   # tp·pp
+
+    def test_headless_family_has_no_kv_cache(self):
+        ws = mem.decode_working_set(_cfg("dlrm-mlp"), batch=512, seq=1)
+        assert float(ws.kv_cache) == 0.0
+        assert float(ws.params) > 0.0

@@ -15,6 +15,13 @@ Four layers:
   * BENCH regression: the committed ``BENCH_ridgeline.json`` must record
     ≥ 10⁵ candidates/s on the grid path and ≥ 10× speedup over per-point
     ``plan()`` looping.
+
+ISSUE 6 additions: head-divisibility (tp | n_heads, and tp | n_kv_heads
+under GQA) over every shipped config; the m ≥ pp 1F1B clamp; the memory
+feasibility cut (default flags never rank a candidate over
+``hbm_capacity_bytes``; the pinned ZeRO-flip golden where the
+unconstrained winner is infeasible and ZeRO-2 flips the ranking); and the
+masked-grid throughput pin from ``planner_feasibility``.
 """
 import json
 import os
@@ -142,7 +149,8 @@ def _scalar_reference(cfg, hw, chips, batch, seq, pod_size, max_pp,
     out = {}
     for pp in pg.pp_choices(cfg, chips, max_pp):
         for dp, tp in pg._factor_pairs(chips // pp):
-            if batch % dp or width % tp:
+            if batch % dp or \
+                    not pg._tp_ok(tp, width, cfg.n_heads, cfg.n_kv_heads):
                 continue
             for m in pg.microbatch_choices(batch // dp, pp):
                 fill = m + pp - 1.0
@@ -240,10 +248,9 @@ def _assert_bit_identical(plans, golden):
     """Every float of every golden plan must survive the grid rewrite
     bit-for-bit (JSON repr round-trips doubles exactly)."""
     assert [p.mesh for p in plans] == [g["mesh"] for g in golden["plans"]]
-    import dataclasses
+    from repro.launch.plan import _plan_dict
     for p, g in zip(plans, golden["plans"]):
-        d = {"mesh": p.mesh, "chips": p.chips, "algo_label": p.algo_label,
-             **dataclasses.asdict(p)}
+        d = _plan_dict(p)
         for key, want in g.items():
             assert d[key] == want, (p.mesh, key, want, d[key])
 
@@ -256,10 +263,25 @@ class TestPinnedPr4Parity:
 
     @pytest.mark.slow
     def test_qwen2_7b_chips32_pod16(self):
+        """The golden predates two ISSUE 6 fixes, so its comparable slice
+        is the rows a correct planner still enumerates: tp must divide
+        n_kv_heads = 4 (the old planner priced tp = 8..32 layouts the
+        sharding layer would have replaced), and the capacity check is
+        disabled (batch 256 × seq 4096 does not fit a 16 GB v5e at
+        ZeRO-0 — the old planner silently recommended it anyway).  Every
+        surviving row must still be bit-identical."""
         g = _golden("plan_pr4_qwen2_7b_c32_pod16.json")
-        plans = plan(_cfg("qwen2-7b"), TPU_V5E, 32, batch=g["batch"],
-                     seq=g["seq"], pod_size=g["pod_size"])
+        cfg = _cfg("qwen2-7b")
+        keep = [row for row in g["plans"]
+                if cfg.n_kv_heads % row["tp"] == 0]
+        assert len(keep) >= 3               # the slice is not vacuous
+        assert len(keep) < len(g["plans"])  # and the fix does remove rows
+        g = dict(g, plans=keep)
+        plans = plan(cfg, TPU_V5E, 32, batch=g["batch"],
+                     seq=g["seq"], pod_size=g["pod_size"],
+                     check_capacity=False)
         _assert_bit_identical(plans, g)
+        assert not any(p.fits for p in plans)   # why the check is off
 
     def test_pp1_candidates_identical_inside_larger_grid(self):
         """The pp = 1 rows of a max_pp > 1 search carry the exact same
@@ -276,6 +298,55 @@ class TestPinnedPr4Parity:
                 (b.runtime, b.t_compute, b.t_memory, b.t_network)
             assert (p.dp_algo, p.tp_algo) == (b.dp_algo, b.tp_algo)
             assert p.microbatches == 1
+
+
+# --- head divisibility: tp | n_heads (and n_kv_heads under GQA) ---------------
+
+
+class TestHeadDivisibility:
+    def test_every_shipped_config_only_gets_head_safe_tp(self):
+        """Regression for the ISSUE 6 bugfix: ``feasible_meshes`` used to
+        check only ``width % tp``, so attention models were offered tp
+        splits the sharding layer cannot express head-wise (and, under
+        GQA, splits that fracture the KV heads)."""
+        from repro.configs import get_config, list_archs
+        checked = 0
+        for name in list_archs():
+            cfg = get_config(name)
+            if not cfg.n_heads:
+                continue
+            for chips in (8, 16, 32, 64):
+                for _, tp in pg.feasible_meshes(cfg, chips, 3072):
+                    assert cfg.n_heads % tp == 0, (name, tp)
+                    if 0 < cfg.n_kv_heads < cfg.n_heads:
+                        assert cfg.n_kv_heads % tp == 0, (name, tp)
+                    checked += 1
+        assert checked > 0
+
+    def test_gqa_kv_heads_bound_tp(self):
+        cfg = _cfg("qwen2-7b")              # 28 heads, 4 KV heads
+        tps = {tp for _, tp in pg.feasible_meshes(cfg, 32, 256)}
+        assert tps == {1, 2, 4}             # 8/16/32 fracture the KV heads
+
+    def test_headless_families_only_need_width(self):
+        cfg = _cfg("dlrm-mlp")              # n_heads == 0
+        tps = {tp for _, tp in pg.feasible_meshes(cfg, 32, 256)}
+        assert tps == {1, 2, 4, 8, 16, 32}
+
+    def test_tp_ok_scalar_cases(self):
+        assert pg._tp_ok(8, 4096, 0, 0)           # headless: width only
+        assert pg._tp_ok(4, 3584, 28, 4)
+        assert not pg._tp_ok(8, 3584, 28, 4)      # fractures KV heads
+        assert not pg._tp_ok(3, 4096, 32, 32)     # width % tp
+        assert not pg._tp_ok(16, 4096, 24, 24)    # heads % tp
+        assert pg._tp_ok(1, 7, 5, 1)              # tp = 1 always fine
+
+    def test_infeasible_error_names_the_head_constraint(self):
+        cfg = _cfg("qwen2-7b")
+        # 56 chips, batch 1: dp must be 1, so tp = 56 > 4 KV heads
+        with pytest.raises(ValueError, match="n_heads=28"):
+            pg.plan_grid(cfg, TPU_V5E, [56], [1], seq=8,
+                         check_capacity=False)
 
 
 # --- the pipeline model itself ------------------------------------------------
@@ -342,6 +413,153 @@ class TestPipelineAxis:
         piped = plan(cfg, CLX, 64, batch=256, max_pp=8)[0]
         assert piped.pp > 1
         assert piped.runtime < flat.runtime
+
+    @settings(max_examples=60)
+    @given(batch_per_dp=st.integers(min_value=1, max_value=768),
+           pp=st.integers(min_value=1, max_value=16))
+    def test_property_microbatch_choices_fill_the_pipeline(self, batch_per_dp,
+                                                           pp):
+        """ISSUE 6 bugfix: m < pp describes a pipeline that never fills —
+        every offered m divides the per-dp batch AND is ≥ pp (pp = 1
+        stays pinned to m = 1)."""
+        ms = pg.microbatch_choices(batch_per_dp, pp)
+        if pp <= 1:
+            assert ms == (1,)
+            return
+        for m in ms:
+            assert batch_per_dp % m == 0
+            assert m >= pp
+        # every valid divisor ≥ pp is offered — the clamp removes only
+        # the never-filling ones
+        assert ms == tuple(d for d in pg._divisors(batch_per_dp) if d >= pp)
+
+    @settings(max_examples=15)
+    @given(chips=st.sampled_from([8, 16, 32, 64]),
+           batch=st.sampled_from([64, 96, 256]),
+           max_pp=st.sampled_from([2, 4, 8, 16]))
+    def test_property_best_plan_never_starves_the_pipeline(self, chips,
+                                                           batch, max_pp):
+        for p in plan(_cfg(), CLX, chips, batch=batch, max_pp=max_pp):
+            assert p.microbatches >= p.pp or p.pp == 1
+            if p.pp == 1:
+                assert p.microbatches == 1
+
+    def test_starved_pp_pair_is_dropped_not_mispriced(self):
+        """A per-dp batch of 4 has no m ≥ 8 divisor: the pp = 8 pairs
+        must vanish rather than price a phantom under-filled pipeline
+        (the old planner offered m ∈ {1, 2, 4} there)."""
+        cfg = _cfg()                        # n_layers = 8
+        plans = plan(cfg, CLX, 8, batch=4, max_pp=8)
+        assert plans                        # pp ∈ {1, 2, 4} still exist
+        assert any(p.pp == 4 for p in plans)
+        assert not any(p.pp == 8 for p in plans)
+        assert all((4 // p.dp) % p.microbatches == 0 for p in plans)
+
+
+# --- memory-capacity feasibility (the ISSUE 6 tentpole) -----------------------
+
+
+class TestCapacityFeasibility:
+    def test_default_flags_never_rank_a_candidate_over_capacity(self):
+        """The headline acceptance criterion: with the capacity check on
+        (the default), no ranked plan's working set exceeds the spec's
+        HBM — at any searched ZeRO stage."""
+        cfg = _cfg("qwen2-7b")
+        grid = pg.plan_grid(cfg, TPU_V5E, [16], [8], seq=128,
+                            zero_stages=(0, 1, 2, 3))
+        plans = grid.plans()
+        assert plans
+        for p in plans:
+            assert p.fits
+            assert p.hbm_bytes <= TPU_V5E.hbm_capacity_bytes
+        assert np.all(grid.hbm_bytes <= TPU_V5E.hbm_capacity_bytes)
+        assert grid.n_enumerated > grid.n_candidates    # the cut did work
+        assert 0.0 < grid.pruned_fraction < 1.0
+
+    def test_capacity_unknown_spec_prunes_nothing(self):
+        """A custom spec without a capacity (the 0.0 default) keeps the
+        pre-ISSUE 6 behaviour: everything is ranked, trivially fits."""
+        hw = HardwareSpec("box", 197e12, 819e9, 50e9)
+        grid = pg.plan_grid(_cfg("qwen2-7b"), hw, [16], [8], seq=128)
+        assert grid.pruned_fraction == 0.0
+        assert all(p.fits for p in grid.plans())
+        assert all(p.hbm_bytes > 0 for p in grid.plans())
+
+    def test_whatif_view_keeps_and_marks_infeasible_rows(self):
+        cfg = _cfg("qwen2-7b")
+        grid = pg.plan_grid(cfg, TPU_V5E, [16], [8], seq=128,
+                            check_capacity=False)
+        assert grid.n_candidates == grid.n_enumerated
+        assert not any(p.fits for p in grid.plans())
+
+    def test_emptied_point_raises_with_zero_hint(self):
+        with pytest.raises(ValueError, match="ZeRO-2"):
+            pg.plan_grid(_cfg("qwen2-7b"), TPU_V5E, [16], [8], seq=128)
+
+    def test_bad_zero_stage_rejected(self):
+        with pytest.raises(ValueError, match="unknown ZeRO stage"):
+            pg.plan_grid(_cfg(), CLX, [8], [512], zero_stages=(0, 5))
+        with pytest.raises(ValueError, match="at least one ZeRO stage"):
+            pg.plan_grid(_cfg(), CLX, [8], [512], zero_stages=())
+
+    def test_zero_rows_price_rs_ag_and_shrink_footprint(self):
+        """A zero ≥ 1 row reprices its dp sync as the structural RS+AG
+        schedule and strictly shrinks the footprint of its zero-0 twin
+        (dp > 1); dp = 1 zero rows are deduplicated away entirely."""
+        cfg = _cfg("qwen2-7b")
+        grid = pg.plan_grid(cfg, TPU_V5E, [16], [8], seq=128,
+                            zero_stages=(0, 1, 2, 3),
+                            check_capacity=False)
+        plans = grid.plans()
+        by_key = {(p.dp, p.tp, p.pp, p.zero_stage): p for p in plans}
+        assert len(by_key) == len(plans)    # dp = 1 dupes really dropped
+        saw_pair = False
+        for (dp, tp, pp, z), p in by_key.items():
+            if dp <= 1:
+                assert z == 0
+                continue
+            if z >= 1:
+                assert p.dp_algo == "rs+ag"
+                base = by_key.get((dp, tp, pp, 0))
+                if base is not None:
+                    saw_pair = True
+                    assert p.hbm_bytes < base.hbm_bytes
+        assert saw_pair
+
+    def test_remat_trades_footprint_for_flops(self):
+        from repro.launch import memory as mem
+        cfg = _cfg("qwen2-7b")
+        base = {(p.dp, p.tp): p for p in plan(cfg, TPU_V5E, 4, batch=4,
+                                              seq=64, check_capacity=False)}
+        remat = plan(cfg, TPU_V5E, 4, batch=4, seq=64,
+                     check_capacity=False, remat=True)
+        for p in remat:
+            b = base[(p.dp, p.tp)]
+            assert p.flops == pytest.approx(
+                mem.REMAT_FLOPS_FACTOR * b.flops, rel=1e-12)
+            assert p.hbm_bytes < b.hbm_bytes
+            assert p.remat and not b.remat
+
+    @pytest.mark.slow
+    def test_pinned_zero_flip_golden(self):
+        """The ISSUE 6 acceptance golden: at qwen2-7b / 16 v5e chips /
+        batch 8 the unconstrained winner (dp4xtp4, ZeRO-0) does not fit
+        in 16 GB, and ZeRO-2 flips the ranking — same mesh, sharded
+        states, feasible, and committed bit-for-bit."""
+        g = _golden("plan_pr6_qwen2_7b_c16_zero.json")
+        cfg = _cfg("qwen2-7b")
+        plans = plan(cfg, TPU_V5E, 16, batch=g["batch"], seq=g["seq"],
+                     zero_stages=tuple(g["zero_stages"]))
+        _assert_bit_identical(plans, g)
+        best = plans[0]
+        assert best.zero_stage == 2 and best.fits
+        # the what-if view shows what the old planner would have picked:
+        # the same mesh at ZeRO-0, faster on paper, over capacity
+        unconstrained = plan(cfg, TPU_V5E, 16, batch=g["batch"],
+                             seq=g["seq"], check_capacity=False)[0]
+        assert unconstrained.mesh == best.mesh
+        assert not unconstrained.fits
+        assert unconstrained.runtime < best.runtime
 
 
 # --- plan_grid API ------------------------------------------------------------
@@ -489,3 +707,21 @@ class TestBenchGridRegression:
 
     def test_grid_at_least_10x_faster_than_plan_loop(self, grid_stats):
         assert grid_stats["speedup_vs_plan_loop"] >= 10.0, grid_stats
+
+    @pytest.fixture()
+    def feasibility_stats(self, bench):
+        stats = bench.get("planner_feasibility")
+        if not stats:
+            pytest.skip("baseline predates the capacity cut")
+        return stats
+
+    def test_masked_grid_still_clears_1e5_candidates_per_s(
+            self, feasibility_stats):
+        """The feasibility mask runs before pricing and must not cost the
+        grid its raw-speed win — the ISSUE 6 CI pin."""
+        assert feasibility_stats["candidates_per_s"] >= 1e5, \
+            feasibility_stats
+
+    def test_capacity_cut_actually_prunes(self, feasibility_stats):
+        assert 0.0 < feasibility_stats["prune_fraction"] < 1.0, \
+            feasibility_stats
