@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-slow bench ci plan-demo calibrate-smoke
+.PHONY: test test-fast test-slow bench ci plan-demo calibrate-smoke trace-demo
 
 test:            ## tier-1 gate: full suite, stop on first failure
 	$(PY) -m pytest -x -q
@@ -29,3 +29,10 @@ ci: 	         ## what CI runs: tests, calibration smoke, benchmarks
 
 plan-demo:
 	PYTHONPATH=src $(PY) examples/plan_demo.py
+
+trace-demo:      ## traced+explained planner run -> artifacts/traces/ (perfetto-loadable)
+	mkdir -p artifacts/traces
+	PYTHONPATH=src $(PY) -m repro.launch.plan --arch qwen2-7b \
+		--hardware tpu_v5e --chips 16 --batch 8 --seq 128 --zero auto \
+		--explain --trace artifacts/traces/plan_demo.trace.json
+	PYTHONPATH=src $(PY) -m repro.obs --validate artifacts/traces/plan_demo.trace.json

@@ -90,9 +90,16 @@ def _calibration_summary():
 
 def main() -> int:
     from benchmarks import arch_table, paper_case_study as cs
+    from repro.obs.metrics import REGISTRY, provenance
 
     rows = []
     ok = True
+
+    # section wall-clocks (validation / planner / sweep / calibration) land
+    # as gauges in the registry and in BENCH's "obs" block; explicit
+    # enter/exit keeps the long section bodies at their natural indent
+    _sec = REGISTRY.section("section.validation_s")
+    _sec.__enter__()
 
     # --- paper §III case study -------------------------------------------------
     (r4a, d4a), us = _timed(cs.fig4a_intensity)
@@ -120,6 +127,9 @@ def main() -> int:
     # inside the paper's (256, 1024] bracket
     span = d6["network_to_compute_between"]
     ok &= span is not None and 256 <= span[0] and span[1] <= 1024
+    _sec.__exit__(None, None, None)
+    _sec = REGISTRY.section("section.planner_s")
+    _sec.__enter__()
 
     # parallelism planner: ranked (dp, tp) meshes for the case-study MLP
     from repro.configs import get_config
@@ -234,6 +244,9 @@ def main() -> int:
     else:
         rows.append(("collective_algo_flip_n16", 0.0, "no_flip"))
         ok = False
+    _sec.__exit__(None, None, None)
+    _sec = REGISTRY.section("section.sweep_s")
+    _sec.__enter__()
 
     terms, us = _timed(cs.compiled_terms, 512)
     ratio = terms["flops"] / terms["analytic_flops"]
@@ -283,9 +296,11 @@ def main() -> int:
     ops.flash_attention(q, kk, kk)
     _, us = _timed(lambda: jax.block_until_ready(ops.flash_attention(q, kk, kk)))
     rows.append(("pallas_flash_512_interpret", us, "interpret-mode"))
+    _sec.__exit__(None, None, None)
 
     # --- calibration trajectory (α–β fit quality per registry entry) -----------
-    calibration = _calibration_summary()
+    with REGISTRY.section("section.calibration_s"):
+        calibration = _calibration_summary()
     for name, c in (calibration or {}).items():
         val = c.get("validation") or {}
         rows.append((f"calibration_{name}", 0.0,
@@ -298,6 +313,7 @@ def main() -> int:
         print(f"{name},{us:.1f},{derived}")
 
     # --- perf baseline for future PRs -----------------------------------------
+    snap = REGISTRY.snapshot()
     bench_path = os.path.join(_REPO_ROOT, "BENCH_ridgeline.json")
     with open(bench_path, "w") as f:
         json.dump({
@@ -306,6 +322,15 @@ def main() -> int:
             "planner_grid": planner_grid,
             "planner_feasibility": planner_feasibility,
             "calibration": calibration,
+            # who/where/when produced this baseline + per-section wall
+            # clocks (regressions localize to a section before a bisect)
+            "obs": {
+                "provenance": provenance(),
+                "sections": {k.removeprefix("section."): v
+                             for k, v in snap["gauges"].items()
+                             if k.startswith("section.")},
+                "metrics": snap,
+            },
             "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                      for n, us, d in rows],
             "paper_claims_ok": bool(ok),

@@ -14,6 +14,9 @@
 #               and writes the BENCH_ridgeline.json perf baseline (incl.
 #               the grid-planner candidates/s + speedup rows that
 #               tests/test_plan_grid.py regression-pins on the next run)
+#   trace:      a traced fast-tier planner run writes a Chrome-trace
+#               artifact to artifacts/traces/ and validates it against
+#               the repro.obs schema (nesting, required fields)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,3 +44,11 @@ fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.measure.calibrate --backend cpu --smoke --devices 4
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run
+
+mkdir -p artifacts/traces
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.plan --arch qwen2-7b --hardware tpu_v5e \
+        --chips 16 --batch 8 --seq 128 --zero auto --explain \
+        --trace artifacts/traces/ci_plan.trace.json > /dev/null
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.obs --validate artifacts/traces/ci_plan.trace.json

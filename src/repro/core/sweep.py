@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.hardware import EfficiencyModel, HardwareSpec, get_hardware
 from repro.core.ridgeline import Resource
+from repro.obs import trace
 
 ArrayLike = Union[float, np.ndarray]
 HardwareLike = Union[HardwareSpec, str]
@@ -127,7 +128,30 @@ def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
     size-dependent achievable-PEAK curve: the effective compute ceiling of
     each grid cell is ``peak · eff(F)``.  The identity curve keeps the
     constant-ceiling times bit-for-bit.
+
+    Runs under a ``core.sweep`` trace span carrying the evaluated cell
+    count (``repro.obs.trace``; a no-op unless tracing is enabled).
     """
+    with trace.span("core.sweep") as sp:
+        res = _sweep_impl(
+            flops, mem_bytes, net_bytes, hw, peak_flops=peak_flops,
+            hbm_bw=hbm_bw, net_bw=net_bw, net_steps=net_steps,
+            alpha_compute=alpha_compute, alpha_memory=alpha_memory,
+            alpha_network=alpha_network, compute_eff=compute_eff)
+        sp.set(cells=int(res.runtime.size))
+        return res
+
+
+def _sweep_impl(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
+                hw: Optional[HardwareLike] = None, *,
+                peak_flops: Optional[ArrayLike] = None,
+                hbm_bw: Optional[ArrayLike] = None,
+                net_bw: Optional[ArrayLike] = None,
+                net_steps: ArrayLike = 0.0,
+                alpha_compute: Optional[ArrayLike] = None,
+                alpha_memory: Optional[ArrayLike] = None,
+                alpha_network: Optional[ArrayLike] = None,
+                compute_eff: Optional[EfficiencyModel] = None) -> SweepResult:
     if isinstance(hw, str):
         hw = get_hardware(hw)
     if hw is not None:

@@ -54,6 +54,8 @@ CLI::
         --batch-grid 256,512,1024 --pp 4
     python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
     python -m repro.launch.plan --arch qwen2-7b --chips 16 --zero auto --remat
+    python -m repro.launch.plan --arch qwen2-7b --chips 16 --zero auto \\
+        --explain --trace artifacts/traces/plan.trace.json
     python -m repro.launch.plan --hardware list
 
 **Memory feasibility.**  When the spec carries a per-chip
@@ -92,6 +94,7 @@ from repro.distributed import collectives
 from repro.launch.plan_grid import (MeshPlan, PlanGrid, POD_LINK,
                                     ZERO_STAGES, feasible_meshes,
                                     param_counts, plan_grid)
+from repro.obs import trace as obs_trace
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
@@ -346,7 +349,41 @@ def _parse_grid(arg: Optional[str], name: str) -> Optional[List[int]]:
     return vals
 
 
+def _explain_dict(grid: PlanGrid) -> dict:
+    from repro.obs import explain as explain_mod
+    return explain_mod.explain_dict(grid)
+
+
+def _print_explain(grid: PlanGrid) -> None:
+    """The --explain section: per-point tables + the machine JSON block."""
+    from repro.obs import explain as explain_mod
+    d = explain_mod.explain_dict(grid)
+    print()
+    print("# --- explain: cost attribution "
+          "(breakdown terms sum to step time) ---")
+    for pt in d["points"]:
+        print(explain_mod.format_prune_reasons(pt))
+        print(explain_mod.format_explain_table(pt["candidates"]))
+    print()
+    print("# explain JSON")
+    print(json.dumps(d, indent=1, sort_keys=True))
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry point: parse, plan, print; flush the tracer on the way out
+    (``--trace PATH`` spans cover everything the run did, even on error)."""
+    try:
+        return _main(argv)
+    finally:
+        t = obs_trace.active()
+        if t is not None and t.path:
+            try:
+                t.write()
+            except OSError as e:
+                print(f"warning: could not write trace: {e}", file=sys.stderr)
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.plan",
         description="Rank (dp, tp, pp) meshes by Ridgeline-projected step "
@@ -396,9 +433,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "(rank every algorithm and report flip points)")
     ap.add_argument("--top", type=int, default=0,
                     help="show only the best N candidates (0 = all)")
+    ap.add_argument("--explain", action="store_true",
+                    help="decompose every candidate's step time into its "
+                         "additive terms (compute/memory α vs work, per-axis "
+                         "network α·steps vs bytes/bw, pipeline bubble, ZeRO "
+                         "sync) plus structured prune reasons; adds an "
+                         "'explain' block to --json output")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace-event JSON of this run's "
+                         "planner spans to PATH (loads in ui.perfetto.dev "
+                         "or chrome://tracing)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="machine-readable output (full ranking + spec)")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs_trace.enable(args.trace)
 
     if args.hardware == "list":
         specs = list_hardware()
@@ -457,7 +506,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              algorithms=algos, pod_size=args.pod_size,
                              max_pp=args.pp, zero_stages=zero_stages,
                              remat=args.remat,
-                             check_capacity=check_capacity)
+                             check_capacity=check_capacity,
+                             explain=args.explain)
         except (ValueError, KeyError) as e:
             print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
             return 2
@@ -494,6 +544,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              **dataclasses.asdict(hw)},
                 "points": [point_dict(c, b) for c in grid.chips_list
                            for b in grid.batch_list],
+                **({"explain": _explain_dict(grid)} if args.explain else {}),
             }, indent=1))
             return 0
         print(f"# {args.arch} grid on {hw.name}: "
@@ -512,13 +563,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if args.algo in ("all", "auto"):
             print()
             print(format_flip_table(flips))
+        if args.explain:
+            _print_explain(grid)
         return 0
 
     try:
         grid = plan_grid(cfg, hw, [args.chips], [batch], seq=args.seq,
                          algorithms=algos, pod_size=args.pod_size,
                          max_pp=args.pp, zero_stages=zero_stages,
-                         remat=args.remat, check_capacity=check_capacity)
+                         remat=args.remat, check_capacity=check_capacity,
+                         explain=args.explain)
         plans = grid.plans()
         flips = flip_points(cfg, hw, args.chips, batch=batch,
                             pod_size=args.pod_size)
@@ -544,6 +598,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          **dataclasses.asdict(hw)},
             "plans": [_plan_dict(p) for p in shown],
             "best": _plan_dict(plans[0]),
+            **({"explain": _explain_dict(grid)} if args.explain else {}),
         }, indent=1))
         return 0
     print(f"# {args.arch} on {args.chips}x {hw.name}, "
@@ -585,6 +640,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if grid.check_capacity and 0 < k <= 3:
             note += f"; infeasible without ZeRO-{k}"
         print(note)
+    if args.explain:
+        _print_explain(grid)
     return 0
 
 

@@ -75,6 +75,7 @@ from repro.core import sweep as sweep_mod
 from repro.core.hardware import HardwareSpec, get_hardware
 from repro.distributed import collectives
 from repro.launch import memory as memory_mod
+from repro.obs import trace
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
@@ -259,6 +260,32 @@ def microbatch_choices(batch_per_dp: int, pp: int) -> Tuple[int, ...]:
 
 
 @dataclasses.dataclass(frozen=True)
+class ExplainTerms:
+    """Additive attribution terms, elementwise-aligned with the grid arrays.
+
+    Computed only under ``plan_grid(..., explain=True)``; every array has
+    length ``n_candidates``.  The splits are exact complements of the
+    engine's own numbers — ``comp_flops = t_compute − comp_alpha`` etc. —
+    so whichever resource bound a candidate, that resource's terms sum to
+    the priced time (``repro.obs.explain`` builds the per-candidate
+    ``breakdown`` from these; the network side sums to ``t_network`` only
+    within float tolerance, because the engine folds the α–β axis times
+    through a net_bw multiply/divide round-trip).
+    """
+
+    comp_alpha: np.ndarray               # α_C·fill dispatch share of t_compute
+    comp_flops: np.ndarray               # F/(peak·eff) share (t_compute − α)
+    mem_alpha: np.ndarray
+    mem_bytes: np.ndarray
+    net_dp_alpha: np.ndarray             # dp grad sync: α·steps (once/step)
+    net_dp_bytes: np.ndarray             # dp grad sync: wire/bw
+    net_tp_alpha: np.ndarray             # tp act syncs: fill·α·steps
+    net_tp_bytes: np.ndarray             # tp act syncs: fill·wire/bw
+    net_pp_alpha: np.ndarray             # pp boundary p2p: fill·α·hops
+    net_pp_bytes: np.ndarray             # pp boundary p2p: fill·bytes/bw
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanGrid:
     """Flat struct-of-arrays result of one ``plan_grid`` pass.
 
@@ -317,6 +344,11 @@ class PlanGrid:
     min_zero_to_fit: np.ndarray          # (n_chips, n_batch) smallest surviving
     #                                      ZeRO stage per point (the
     #                                      "infeasible without ZeRO-k" k)
+
+    # attribution payload — populated only under explain=True (obs.explain)
+    explain_terms: Optional[ExplainTerms] = None
+    prune_reasons: Optional[Dict[Tuple[int, int], Dict[str, int]]] = None
+    #                                    ^ (ci, bi) -> enumeration prune counts
 
     @property
     def n_candidates(self) -> int:
@@ -430,6 +462,53 @@ def _point_candidates(width: int, n_heads: int, n_kv_heads: int,
             np.asarray(m_l, dtype=np.int64))
 
 
+@functools.lru_cache(maxsize=4096)
+def _point_prune_stats(width: int, n_heads: int, n_kv_heads: int,
+                       n_layers: int, chips: int, batch: int,
+                       max_pp: int) -> Tuple[Tuple[str, int], ...]:
+    """Why raw tuples fell out of one grid point's enumeration, by gate.
+
+    The shadow of :func:`_point_candidates`: walks the same divisor space
+    but counts what each feasibility gate rejected instead of keeping the
+    survivors — the structured half of ``--explain``'s prune account (the
+    capacity cut is the other half; it happens downstream on enumerated
+    candidates and is reported from ``PlanGrid.n_pruned``).  Units: the
+    two pp gates count (dp, tp, pp) mesh tuples under the rejected pp;
+    the dp/tp gates count (dp, tp, pp) tuples; ``microbatch_lt_pp``
+    counts (dp, tp, pp, m) tuples whose 1F1B pipeline would never fill
+    (m < pp); ``kept_mesh_tuples`` counts the (dp, tp, pp, m) tuples
+    that reached pricing — before the zero/algorithm axes are tiled on.
+    Cached alongside the candidate cache; kept separate so the hot
+    enumeration path never pays for bookkeeping it only needs under
+    ``explain=True``.
+    """
+    stats = {"pp_exceeds_max_pp": 0, "pp_layer_indivisible": 0,
+             "batch_dp_indivisible": 0, "tp_shard_infeasible": 0,
+             "microbatch_lt_pp": 0, "kept_mesh_tuples": 0}
+    for pp in _divisors(chips):
+        n_pairs = len(_divisors(chips // pp))
+        if pp > max_pp:
+            stats["pp_exceeds_max_pp"] += n_pairs
+            continue
+        if n_layers % pp:
+            stats["pp_layer_indivisible"] += n_pairs
+            continue
+        for dp, tp in _factor_pairs(chips // pp):
+            if batch % dp:
+                stats["batch_dp_indivisible"] += 1
+                continue
+            if not _tp_ok(tp, width, n_heads, n_kv_heads):
+                stats["tp_shard_infeasible"] += 1
+                continue
+            if pp > 1:
+                divs = _divisors(batch // dp)
+                stats["microbatch_lt_pp"] += sum(1 for m in divs if m < pp)
+                stats["kept_mesh_tuples"] += sum(1 for m in divs if m >= pp)
+            else:
+                stats["kept_mesh_tuples"] += 1
+    return tuple(sorted(stats.items()))
+
+
 def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
                           batch_list: Sequence[int], max_pp: int,
                           algo_codes: Sequence[int],
@@ -520,7 +599,8 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
               seq: int = 1, algorithms: Sequence[str] = ("auto",),
               pod_size: Optional[int] = None, max_pp: int = 1,
               zero_stages: Sequence[int] = (0,), remat: bool = False,
-              check_capacity: bool = True) -> PlanGrid:
+              check_capacity: bool = True,
+              explain: bool = False) -> PlanGrid:
     """Evaluate every (dp × tp × pp) × m × zero × algorithm × batch ×
     chips candidate in one broadcast pass.
 
@@ -543,7 +623,41 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     smallest ZeRO stage (or remat) that would save it.
     ``check_capacity=False`` keeps infeasible rows, merely marking
     ``fits``/``hbm_bytes`` — the what-if view.
+
+    ``explain=True`` additionally carries the attribution payload:
+    per-candidate additive term splits (:class:`ExplainTerms`) and
+    per-point prune-reason counts (:func:`_point_prune_stats`), consumed
+    by ``repro.obs.explain`` / CLI ``--explain``.  The flag never touches
+    the priced numbers — every array the default path returns is
+    bit-identical either way.
+
+    Every pass runs under named trace spans (``plan_grid`` →
+    ``enumerate`` / ``feasibility`` / ``price_collectives`` /
+    ``sweep_classify``; see :mod:`repro.obs.trace`) that are no-ops
+    unless tracing is enabled.
     """
+    with trace.span("plan_grid", arch=getattr(cfg, "name", "?"),
+                    n_chips=len(chips_list), n_batch=len(batch_list),
+                    max_pp=max_pp, explain=explain) as sp:
+        grid = _plan_grid_impl(
+            cfg, hw, chips_list, batch_list, seq=seq, algorithms=algorithms,
+            pod_size=pod_size, max_pp=max_pp, zero_stages=zero_stages,
+            remat=remat, check_capacity=check_capacity, explain=explain)
+        if trace.enabled():
+            sp.set(n_enumerated=grid.n_enumerated,
+                   n_candidates=grid.n_candidates,
+                   n_pruned=int(grid.n_pruned.sum()))
+            trace.count("planner.candidates_enumerated", grid.n_enumerated)
+            trace.count("planner.candidates_evaluated", grid.n_candidates)
+        return grid
+
+
+def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
+                    chips_list: Sequence[int], batch_list: Sequence[int], *,
+                    seq: int, algorithms: Sequence[str],
+                    pod_size: Optional[int], max_pp: int,
+                    zero_stages: Sequence[int], remat: bool,
+                    check_capacity: bool, explain: bool) -> PlanGrid:
     if isinstance(hw, str):
         hw = get_hardware(hw)
     if not chips_list or not batch_list:
@@ -561,41 +675,49 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
                   else menu.index(collectives.canonical_algorithm(a))
                   for a in algorithms]
 
-    cand = _enumerate_candidates(cfg, chips_list, batch_list, max_pp,
-                                 algo_codes, tuple(int(z) for z in
-                                                   zero_stages))
-    n_enumerated = int(cand["dp"].size)
+    with trace.span("plan_grid.enumerate") as sp:
+        cand = _enumerate_candidates(cfg, chips_list, batch_list, max_pp,
+                                     algo_codes, tuple(int(z) for z in
+                                                       zero_stages))
+        n_enumerated = int(cand["dp"].size)
+        sp.set(n_enumerated=n_enumerated)
     point_shape = (len(chips_list), len(batch_list))
     n_pruned = np.zeros(point_shape, dtype=np.int64)
 
     # --- memory feasibility: price the working set, cut before pricing -------
-    capacity = float(hw.hbm_capacity_bytes)
-    batch_arr = np.asarray(batch_list, dtype=np.float64)
-    hbm = memory_mod.training_working_set(
-        cfg, batch=batch_arr[cand["batch_idx"]], seq=seq,
-        dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
-        microbatches=cand["microbatches"], zero_stage=cand["zero"],
-        remat=remat).total
-    fits = hbm <= capacity if capacity > 0 else \
-        np.ones(hbm.shape, dtype=bool)
-    if check_capacity and capacity > 0 and not fits.all():
-        np.add.at(n_pruned, (cand["chips_idx"][~fits],
-                             cand["batch_idx"][~fits]), 1)
-        survivors = np.zeros(point_shape, dtype=np.int64)
-        np.add.at(survivors, (cand["chips_idx"], cand["batch_idx"]),
-                  fits.astype(np.int64))
-        if (survivors == 0).any():
-            ci, bi = np.argwhere(survivors == 0)[0]
-            raise _capacity_error(cfg, capacity, chips_list[ci],
-                                  batch_list[bi], seq, max_pp, remat,
-                                  zero_stages)
-        cand = {k: v[fits] for k, v in cand.items()}
-        hbm = hbm[fits]
-        fits = np.ones(hbm.shape, dtype=bool)
-    min_zero_to_fit = np.full(point_shape, np.iinfo(np.int64).max)
-    np.minimum.at(min_zero_to_fit, (cand["chips_idx"], cand["batch_idx"]),
-                  np.where(fits, cand["zero"], np.iinfo(np.int64).max))
+    with trace.span("plan_grid.feasibility") as sp:
+        capacity = float(hw.hbm_capacity_bytes)
+        batch_arr = np.asarray(batch_list, dtype=np.float64)
+        hbm = memory_mod.training_working_set(
+            cfg, batch=batch_arr[cand["batch_idx"]], seq=seq,
+            dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
+            microbatches=cand["microbatches"], zero_stage=cand["zero"],
+            remat=remat).total
+        fits = hbm <= capacity if capacity > 0 else \
+            np.ones(hbm.shape, dtype=bool)
+        if check_capacity and capacity > 0 and not fits.all():
+            np.add.at(n_pruned, (cand["chips_idx"][~fits],
+                                 cand["batch_idx"][~fits]), 1)
+            survivors = np.zeros(point_shape, dtype=np.int64)
+            np.add.at(survivors, (cand["chips_idx"], cand["batch_idx"]),
+                      fits.astype(np.int64))
+            if (survivors == 0).any():
+                ci, bi = np.argwhere(survivors == 0)[0]
+                raise _capacity_error(cfg, capacity, chips_list[ci],
+                                      batch_list[bi], seq, max_pp, remat,
+                                      zero_stages)
+            cand = {k: v[fits] for k, v in cand.items()}
+            hbm = hbm[fits]
+            fits = np.ones(hbm.shape, dtype=bool)
+        min_zero_to_fit = np.full(point_shape, np.iinfo(np.int64).max)
+        np.minimum.at(min_zero_to_fit,
+                      (cand["chips_idx"], cand["batch_idx"]),
+                      np.where(fits, cand["zero"],
+                               np.iinfo(np.int64).max))
+        sp.set(n_pruned=int(n_pruned.sum()), n_kept=int(cand["dp"].size))
 
+    _sp_price = trace.span("plan_grid.price_collectives")
+    _sp_price.__enter__()
     dp = cand["dp"].astype(np.float64)
     tp = cand["tp"].astype(np.float64)
     pp = cand["pp"].astype(np.float64)
@@ -669,6 +791,8 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     pp_bytes_mb = collectives.pp_boundary_bytes(act_mb, pp)
     pp_steps_mb = 2.0 * np.where(pp > 1.0, 1.0, 0.0)
     pp_time = pp_alpha * pp_steps_mb + pp_bytes_mb / pp_bw
+    _sp_price.set(n_candidates=int(dp.size))
+    _sp_price.__exit__(None, None, None)
 
     # --- 1F1B pipeline fill + one Ridgeline sweep over the candidate set -----
     # The serialized critical path holds m + pp − 1 microbatch slots
@@ -683,11 +807,33 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     # per-axis α–β times fold into primary-link-equivalent bytes
     t_net_step = fill * (tp_time + pp_time) + dp_time
     eff_net_bytes = t_net_step * hw.net_bw
-    res = sweep_mod.sweep(
-        flops_mb, mem_mb, eff_net_bytes, hw,
-        peak_flops=hw.peak_flops / fill, hbm_bw=hw.hbm_bw / fill,
-        alpha_compute=hw.alpha_compute * fill,
-        alpha_memory=hw.alpha_memory * fill, net_steps=0.0)
+    with trace.span("plan_grid.sweep_classify", n_candidates=int(dp.size)):
+        res = sweep_mod.sweep(
+            flops_mb, mem_mb, eff_net_bytes, hw,
+            peak_flops=hw.peak_flops / fill, hbm_bw=hw.hbm_bw / fill,
+            alpha_compute=hw.alpha_compute * fill,
+            alpha_memory=hw.alpha_memory * fill, net_steps=0.0)
+
+    # --- attribution payload (explain=True only; never touches the numbers) --
+    explain_terms = prune_reasons = None
+    if explain:
+        comp_alpha = np.where(flops_mb > 0, hw.alpha_compute * fill, 0.0)
+        mem_alpha = np.where(mem_mb > 0, hw.alpha_memory * fill, 0.0)
+        explain_terms = ExplainTerms(
+            comp_alpha=comp_alpha, comp_flops=res.t_compute - comp_alpha,
+            mem_alpha=mem_alpha, mem_bytes=res.t_memory - mem_alpha,
+            net_dp_alpha=dp_alpha * dp_steps,
+            net_dp_bytes=dp_wire / dp_bw,
+            net_tp_alpha=fill * tp_alpha * tp_steps_mb,
+            net_tp_bytes=fill * tp_wire_mb / tp_bw,
+            net_pp_alpha=fill * pp_alpha * pp_steps_mb,
+            net_pp_bytes=fill * pp_bytes_mb / pp_bw)
+        prune_reasons = {
+            (ci, bi): dict(_point_prune_stats(
+                width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,
+                int(c), int(b), max_pp))
+            for ci, c in enumerate(chips_list)
+            for bi, b in enumerate(batch_list)}
 
     attained = np.where(res.runtime > 0,
                         sweep_mod._safe_div(flops_step, res.runtime), 0.0)
@@ -716,4 +862,5 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         runtime_lo=np.maximum(res.runtime * (1.0 - err), 0.0),
         runtime_hi=res.runtime * (1.0 + err),
         hbm_bytes=hbm, fits=fits, n_enumerated=n_enumerated,
-        n_pruned=n_pruned, min_zero_to_fit=min_zero_to_fit)
+        n_pruned=n_pruned, min_zero_to_fit=min_zero_to_fit,
+        explain_terms=explain_terms, prune_reasons=prune_reasons)

@@ -63,6 +63,8 @@ from repro.core.hardware import (CALIBRATED_SUFFIX, CALIBRATION_SCHEMA,
                                  EfficiencyModel, HardwareSpec,
                                  calibration_dir, get_hardware)
 from repro.measure.microbench import Measurement
+from repro.obs import trace
+from repro.obs.metrics import provenance
 
 _RESOURCES = ("peak_flops", "hbm_bw", "net_bw")
 _ALPHAS = ("alpha_compute", "alpha_memory", "alpha_network")
@@ -395,6 +397,9 @@ class Calibration:
             "schema": CALIBRATION_SCHEMA,
             "name": self.name,
             "base": self.base.name,
+            # who/what/when produced these numbers (git sha, library
+            # versions, hostname, wall clock) — repro.obs.metrics
+            "provenance": provenance(),
             "estimator": self.estimator,
             "peak_flops": self.peak_flops,
             "hbm_bw": self.hbm_bw,
@@ -524,8 +529,10 @@ def fit_ceilings(measurements: Sequence[Measurement],
                for m in measurements if groups.get(m.category) == r]
         by_resource[r] = pts
         if pts:
-            params.alphas[r], params.peaks[r] = \
-                _fit_alpha_beta(pts, params.peaks[r])
+            with trace.span(f"calibrate.fit.{('compute', 'memory')[r]}",
+                            n_points=len(pts)):
+                params.alphas[r], params.peaks[r] = \
+                    _fit_alpha_beta(pts, params.peaks[r])
             fitted[r] = True
     # compute only: also try the size-dependent efficiency ceiling and keep
     # whichever model (constant intercept vs saturating curve) prices the
@@ -533,7 +540,11 @@ def fit_ceilings(measurements: Sequence[Measurement],
     # synthetic α–β suites — and any spec that is genuinely latency-plus-
     # constant-ceiling — are reproduced unchanged
     cpts = by_resource[0]
-    eff_fit = _fit_efficiency(cpts) if cpts else None
+    if cpts:
+        with trace.span("calibrate.fit.efficiency", n_points=len(cpts)):
+            eff_fit = _fit_efficiency(cpts)
+    else:
+        eff_fit = None
     if eff_fit is not None:
         peak_eff, eff_model = eff_fit
         sse_ab = _sse(cpts, lambda u, q, a=params.alphas[0],
@@ -553,16 +564,18 @@ def fit_ceilings(measurements: Sequence[Measurement],
         by_link.setdefault(tag, []).append(
             (m.work.net_steps, m.work.net_bytes, _observed(m, estimator)))
     for tag, pts in by_link.items():
-        if tag is None:
-            params.alphas[2], params.peaks[2] = \
-                _fit_alpha_beta(pts, params.peaks[2])
-            fitted[2] = True
-        else:
-            prior = params.link_bws.get(tag, params.peaks[2])
-            alpha, bw = _fit_alpha_beta(pts, prior)
-            params.link_alphas[tag] = alpha
-            params.link_bws[tag] = bw
-            measured_links.add(tag)
+        with trace.span("calibrate.fit.network",
+                        link=tag or "primary", n_points=len(pts)):
+            if tag is None:
+                params.alphas[2], params.peaks[2] = \
+                    _fit_alpha_beta(pts, params.peaks[2])
+                fitted[2] = True
+            else:
+                prior = params.link_bws.get(tag, params.peaks[2])
+                alpha, bw = _fit_alpha_beta(pts, prior)
+                params.link_alphas[tag] = alpha
+                params.link_bws[tag] = bw
+                measured_links.add(tag)
     iterations = 1
     sources = {res: ("measured" if fitted[r] else "datasheet")
                for r, res in enumerate(_RESOURCES)}
@@ -655,16 +668,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     _configure_backend(args.backend, args.devices)
 
     from repro.measure import microbench
-    suite = microbench.default_suite(
-        smoke=args.smoke, repeats=args.repeats, steps=not args.no_steps)
+    with trace.span("calibrate.suite", smoke=args.smoke,
+                    devices=args.devices):
+        suite = microbench.default_suite(
+            smoke=args.smoke, repeats=args.repeats, steps=not args.no_steps)
     fit = [m for m in suite if m.category != "step"]
     steps = [m for m in suite if m.category == "step"]
     if not any(m.category == "network" for m in fit):
         print("note: single device -> no collective benches; NET ceiling "
               "stays datasheet (re-run with --devices N)", file=sys.stderr)
 
-    calib = fit_ceilings(fit, base, name=args.name, validation=steps,
-                         estimator=args.estimator)
+    with trace.span("calibrate.fit", n_fit=len(fit),
+                    n_validation=len(steps)):
+        calib = fit_ceilings(fit, base, name=args.name, validation=steps,
+                             estimator=args.estimator)
     path = calib.save(args.out)
     print(calib.summary())
     print(f"wrote {path}")

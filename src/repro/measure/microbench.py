@@ -31,10 +31,12 @@ smoke suite finishes in well under a minute).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.ridgeline import WorkUnit
 from repro.measure.timers import TimingStats, time_callable
+from repro.obs import trace
 
 #: bench categories, also used by calibrate.py to split fit vs validation
 CATEGORIES = ("compute", "memory", "network", "step")
@@ -109,20 +111,24 @@ class Measurement:
             "seconds": self.seconds,
             "best_seconds": self.best,
             "category": self.category,
-            "rel_spread": self.rel_spread,
+            # a NaN spread (n<3: not measurable — timers.rel_spread) is
+            # not representable in strict JSON; serialize it as null
+            "rel_spread": None if math.isnan(self.rel_spread)
+            else self.rel_spread,
             "backend": self.backend,
             "meta": dict(self.meta),
         }
 
     @staticmethod
     def from_dict(d: Dict) -> "Measurement":
+        spread = d.get("rel_spread", 0.0)
         return Measurement(
             work=WorkUnit(d["name"], d["flops"], d["mem_bytes"],
                           d["net_bytes"],
                           net_steps=d.get("net_steps", 0.0)),
             seconds=d["seconds"], category=d["category"],
             best_seconds=d.get("best_seconds", 0.0),
-            rel_spread=d.get("rel_spread", 0.0),
+            rel_spread=math.nan if spread is None else spread,
             backend=d.get("backend", ""),
             meta=tuple(sorted(d.get("meta", {}).items())))
 
@@ -131,7 +137,13 @@ def _measure(name: str, fn, work: WorkUnit, category: str, *,
              repeats: int, warmup: int = 2,
              meta: Tuple[Tuple[str, str], ...] = ()) -> Measurement:
     import jax
-    stats: TimingStats = time_callable(fn, repeats=repeats, warmup=warmup)
+    # link-tagged span per bench: meta keys ("link", "via", ...) become
+    # span args, so a calibration trace shows where the suite spent time
+    with trace.span(f"bench.{work.name}", category=category,
+                    repeats=repeats, **dict(meta)) as sp:
+        stats: TimingStats = time_callable(fn, repeats=repeats,
+                                           warmup=warmup)
+        sp.set(median_s=stats.median, best_s=stats.best)
     return Measurement(
         work=work, seconds=stats.median, best_seconds=stats.best,
         category=category, rel_spread=stats.rel_spread,
@@ -306,8 +318,10 @@ def train_step_bench(batch: int = 64, width: int = 256, layers: int = 3, *,
     compiled = jitted.lower(state, batch_arrs).compile()
     work = _hlo_work_unit(f"train_step_mlp_b{batch}_w{width}x{layers}",
                           compiled)
-    stats = time_callable(lambda: jitted(state, batch_arrs),
-                          repeats=repeats, warmup=2)
+    with trace.span(f"bench.{work.name}", category="step",
+                    kind="train_step", repeats=repeats):
+        stats = time_callable(lambda: jitted(state, batch_arrs),
+                              repeats=repeats, warmup=2)
     return Measurement(work=work, seconds=stats.median, category="step",
                        rel_spread=stats.rel_spread,
                        backend=jax.default_backend(),
@@ -332,8 +346,10 @@ def serve_step_bench(batch: int = 8, max_len: int = 64, *,
     jitted = jax.jit(build_serve_step(cfg))
     compiled = jitted.lower(params, tok, cache, pos).compile()
     work = _hlo_work_unit(f"serve_step_smollm_b{batch}", compiled)
-    stats = time_callable(lambda: jitted(params, tok, cache, pos),
-                          repeats=repeats, warmup=2)
+    with trace.span(f"bench.{work.name}", category="step",
+                    kind="serve_step", repeats=repeats):
+        stats = time_callable(lambda: jitted(params, tok, cache, pos),
+                              repeats=repeats, warmup=2)
     return Measurement(work=work, seconds=stats.median, category="step",
                        rel_spread=stats.rel_spread,
                        backend=jax.default_backend(),
@@ -442,4 +458,8 @@ def default_suite(*, smoke: bool = True, repeats: Optional[int] = None,
             repeats=r)
         return out
 
-    return merge_passes([one_pass() for _ in range(max(passes, 1))])
+    results = []
+    for p in range(max(passes, 1)):
+        with trace.span("bench.suite_pass", index=p, smoke=smoke):
+            results.append(one_pass())
+    return merge_passes(results)

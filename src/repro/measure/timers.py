@@ -19,8 +19,13 @@ statistics core.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Sequence, Tuple
+
+#: fewer kept samples than this and an IQR is structurally ~0 — the spread
+#: statistic is undefined, not "perfectly stable"
+MIN_SAMPLES_FOR_SPREAD = 3
 
 
 def _leaves(out: Any):
@@ -73,7 +78,17 @@ class TimingStats:
 
     @property
     def rel_spread(self) -> float:
-        """IQR as a fraction of the median — the noise figure of merit."""
+        """IQR as a fraction of the median — the noise figure of merit.
+
+        NaN when fewer than :data:`MIN_SAMPLES_FOR_SPREAD` samples were
+        kept: a 1–2 sample run has an IQR of (near) 0 by construction,
+        and reporting ``0.0`` there would read as "perfectly stable"
+        when the spread was simply never measured.  NaN propagates
+        honestly through downstream noise gates (any ``spread < tol``
+        acceptance check fails rather than silently passing).
+        """
+        if len(self.samples) < MIN_SAMPLES_FOR_SPREAD:
+            return math.nan
         return self.iqr / self.median if self.median > 0 else 0.0
 
     @property
@@ -82,8 +97,11 @@ class TimingStats:
         return self.median
 
     def summary(self) -> str:
-        return (f"{self.median * 1e3:.3f}ms ±{self.iqr * 1e3:.3f}ms IQR "
-                f"(n={len(self.samples)}, best {self.best * 1e3:.3f}ms)")
+        s = (f"{self.median * 1e3:.3f}ms ±{self.iqr * 1e3:.3f}ms IQR "
+             f"(n={len(self.samples)}, best {self.best * 1e3:.3f}ms)")
+        if len(self.samples) < MIN_SAMPLES_FOR_SPREAD:
+            s += " [n<3: spread not measurable]"
+        return s
 
 
 def robust_stats(samples: Sequence[float],

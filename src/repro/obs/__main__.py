@@ -1,0 +1,12 @@
+"""``python -m repro.obs --validate PATH`` — the trace-schema CLI.
+
+Delegates to :func:`repro.obs.trace.main`; running the package (rather
+than ``python -m repro.obs.trace``) avoids runpy's double-import warning
+for a module the package ``__init__`` already re-exports.
+"""
+import sys
+
+from repro.obs.trace import main
+
+if __name__ == "__main__":
+    sys.exit(main())

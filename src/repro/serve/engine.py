@@ -17,6 +17,9 @@ from repro.models import encdec as encdec_mod
 from repro.models import transformer as lm_mod
 from repro.models import vlm as vlm_mod
 from repro.models.common import ModelConfig
+from repro.obs import trace
+from repro.obs.metrics import REGISTRY
+from repro.measure.timers import block_until_ready
 
 
 def build_serve_step(cfg: ModelConfig) -> Callable:
@@ -54,11 +57,18 @@ def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
     tok = prompt[:, :1]
     out = [tok]
     logits = None
-    for t in range(S + steps - 1):
-        logits, cache = serve_step(params, tok, cache, jnp.int32(t))
-        if t + 1 < S:
-            tok = prompt[:, t + 1:t + 2]
-        else:
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
-        out.append(tok)
+    step_hist = REGISTRY.histogram("serve.step_seconds")
+    with trace.span("serve.generate", arch=cfg.name, batch=B,
+                    prompt_len=S, steps=steps):
+        for t in range(S + steps - 1):
+            # per-token decode latency: block inside the timed region so
+            # async dispatch is charged for the work, not the dispatch
+            with step_hist.time():
+                logits, cache = serve_step(params, tok, cache, jnp.int32(t))
+                block_until_ready(logits)
+            if t + 1 < S:
+                tok = prompt[:, t + 1:t + 2]
+            else:
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+            out.append(tok)
     return jnp.concatenate(out, axis=1)

@@ -25,6 +25,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.obs import trace
+from repro.obs.metrics import REGISTRY
 
 
 @dataclasses.dataclass
@@ -74,35 +76,45 @@ class ResilientRunner:
         step = start_step
         retries = 0
         last_failed_step = -1
-        while step < n_steps:
-            try:
-                t0 = time.monotonic()
-                if self.failure_hook is not None:
-                    self.failure_hook(step)   # inside the timed window
-                batch = stream.batch(step)
-                state, metrics = self.train_step(state, batch)
-                jax.block_until_ready(metrics["loss"])
-                dt = time.monotonic() - t0
-                self._track_time(step, dt)
-                history.append(
-                    {k: float(v) for k, v in metrics.items()} | {"step": step})
-                step += 1
-                if step % self.cfg.ckpt_every == 0:
-                    self.ckpt.save(step, state, async_=self.cfg.async_ckpt)
-            except _RECOVERABLE as e:  # noqa: PERF203
-                # retries are counted PER FAILING STEP: a replay that makes
-                # progress and then fails at the same step again is the
-                # deterministic-failure case and must eventually give up
-                # (counting globally and resetting on success would loop
-                # forever on a persistent fault).
-                if step == last_failed_step:
-                    retries += 1
-                else:
-                    retries, last_failed_step = 1, step
-                if retries > self.cfg.max_retries:
-                    raise
-                self.ckpt.wait()
-                state, step = self.resume_or_init(state)
+        step_hist = REGISTRY.histogram("train.step_seconds")
+        with trace.span("train.run", n_steps=n_steps,
+                        start_step=start_step) as run_sp:
+            while step < n_steps:
+                try:
+                    t0 = time.monotonic()
+                    if self.failure_hook is not None:
+                        self.failure_hook(step)   # inside the timed window
+                    batch = stream.batch(step)
+                    state, metrics = self.train_step(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.monotonic() - t0
+                    step_hist.observe(dt)
+                    self._track_time(step, dt)
+                    history.append(
+                        {k: float(v) for k, v in metrics.items()}
+                        | {"step": step})
+                    step += 1
+                    if step % self.cfg.ckpt_every == 0:
+                        self.ckpt.save(step, state,
+                                       async_=self.cfg.async_ckpt)
+                except _RECOVERABLE as e:  # noqa: PERF203
+                    # retries are counted PER FAILING STEP: a replay that
+                    # makes progress and then fails at the same step again
+                    # is the deterministic-failure case and must eventually
+                    # give up (counting globally and resetting on success
+                    # would loop forever on a persistent fault).
+                    trace.count("train.recoverable_failures", 1)
+                    if step == last_failed_step:
+                        retries += 1
+                    else:
+                        retries, last_failed_step = 1, step
+                    if retries > self.cfg.max_retries:
+                        raise
+                    self.ckpt.wait()
+                    state, step = self.resume_or_init(state)
+            if trace.enabled():
+                run_sp.set(steps_run=len(history),
+                           n_stragglers=len(self.stragglers))
         self.ckpt.wait()
         self.ckpt.save(n_steps, state, async_=False)
         return state, history

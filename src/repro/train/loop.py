@@ -28,6 +28,7 @@ from repro.models import mlp_dlrm as mlp_mod
 from repro.models import transformer as lm_mod
 from repro.models import vlm as vlm_mod
 from repro.models.common import ModelConfig, softmax_cross_entropy
+from repro.obs import trace
 
 
 class TrainState(NamedTuple):
@@ -123,16 +124,17 @@ def build_train_step(cfg: ModelConfig, optimizer,
 
 
 def init_train_state(key, cfg: ModelConfig, optimizer) -> TrainState:
-    if cfg.family == "encdec":
-        params = encdec_mod.init_encdec(key, cfg)
-    elif cfg.family == "vlm":
-        params = vlm_mod.init_vlm(key, cfg)
-    elif cfg.family == "mlp":
-        params = mlp_mod.init_mlp(key, cfg)
-    else:
-        params = lm_mod.init_lm(key, cfg)
-    return TrainState(params=params, opt_state=optimizer.init(params),
-                      step=jnp.zeros((), jnp.int32), rng=key)
+    with trace.span("train.init_state", arch=cfg.name, family=cfg.family):
+        if cfg.family == "encdec":
+            params = encdec_mod.init_encdec(key, cfg)
+        elif cfg.family == "vlm":
+            params = vlm_mod.init_vlm(key, cfg)
+        elif cfg.family == "mlp":
+            params = mlp_mod.init_mlp(key, cfg)
+        else:
+            params = lm_mod.init_lm(key, cfg)
+        return TrainState(params=params, opt_state=optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32), rng=key)
 
 
 def model_param_specs(cfg: ModelConfig):
