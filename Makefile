@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-slow bench ci plan-demo calibrate-smoke trace-demo
+.PHONY: test test-fast test-slow bench ci lint plan-demo calibrate-smoke trace-demo
 
 test:            ## tier-1 gate: full suite, stop on first failure
 	$(PY) -m pytest -x -q
@@ -17,6 +17,14 @@ test-slow:       ## the slow tier only (marked end-to-end tests)
 
 bench:           ## paper-claim checks; nonzero exit on mismatch
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+lint:            ## ruff (when installed) + the repro.analysis static gate
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src benchmarks examples; \
+	else \
+		echo "lint: ruff not installed, skipping (config pinned in pyproject.toml)"; \
+	fi
+	PYTHONPATH=src $(PY) -m repro.analysis src/repro
 
 calibrate-smoke: ## measure this box + fit achievable ceilings (<60s, CPU)
 	PYTHONPATH=src $(PY) -m repro.measure.calibrate --backend cpu --smoke --devices 4

@@ -29,7 +29,6 @@ def emit(out=sys.stdout):
     w(arch_table.emit_dryrun_md("2x16x16"))
 
     w("\n\n## §Perf variants (generated)\n\n")
-    from repro.core.report import ROOFLINE_HEADER, roofline_row
     rows = [r for r in arch_table.reports_all()
             if r.variant != "baseline" or
             (r.arch, r.shape) in {("qwen2-7b", "train_4k"),

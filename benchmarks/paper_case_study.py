@@ -23,7 +23,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import CLX, Resource, WorkUnit, analyze, ascii_plot, svg_plot
+from repro.core import CLX, WorkUnit, analyze, ascii_plot, svg_plot
 from repro.core import sweep as sweep_mod
 from repro.distributed import collectives
 from repro.models.mlp_dlrm import analytic_work_unit

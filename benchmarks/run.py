@@ -284,8 +284,8 @@ def main() -> int:
     rows.append(("sweep_engine_1m_cells", us,
                  f"cells_per_s={cells_per_s:.3g}"))
 
-    import jax, jax.numpy as jnp
-    from repro.kernels import ops, ref
+    import jax
+    from repro.kernels import ops
     a = jax.random.normal(jax.random.PRNGKey(0), (512, 512))
     b = jax.random.normal(jax.random.PRNGKey(1), (512, 512))
     ops.matmul(a, b)   # compile

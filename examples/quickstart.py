@@ -6,7 +6,6 @@ checkpoints, and a Ridgeline report of the compiled step at the end.
     PYTHONPATH=src python examples/quickstart.py [--steps 300]
 """
 import argparse
-import os
 import tempfile
 
 import jax
@@ -14,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs import get_config, get_reduced
+from repro.configs import get_reduced
 from repro.core import TPU_V5E, WorkUnit, analyze
 from repro.core.hlo_analysis import analyze_compiled
 from repro.data.pipeline import DataConfig, make_stream

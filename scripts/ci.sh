@@ -1,5 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 gate + calibration smoke + paper-claim checks — what `make ci` runs.
+#   lint:       `make lint` (ruff when installed, plus the repro.analysis
+#               units/contract/state gate); runs inside the fast-tier
+#               wall-clock budget so it cannot silently grow, and a JSON
+#               findings report is written to artifacts/analysis/ below
 #   tests:      PYTHONPATH via pytest.ini (pythonpath = src .); the fast
 #               tier (-m "not slow", budgeted below) runs first for quick
 #               signal, then the slow end-to-end tier
@@ -30,6 +34,7 @@ else
     # exit code 5 = "no tests collected": fine for either tier when the
     # caller's args (a file, -k pattern) select tests only in the other one
     fast_t0=$(date +%s)
+    make lint
     python -m pytest -x -q -m "not slow" --durations=10 "$@" \
         || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
     fast_s=$(( $(date +%s) - fast_t0 ))
@@ -44,6 +49,12 @@ fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.measure.calibrate --backend cpu --smoke --devices 4
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run
+
+# machine-readable analyzer report for CI artifact upload; the `make lint`
+# gate above already failed the build if this is non-empty
+mkdir -p artifacts/analysis
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.analysis --json src/repro > artifacts/analysis/findings.json
 
 mkdir -p artifacts/traces
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

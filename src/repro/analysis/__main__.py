@@ -1,0 +1,13 @@
+"""CLI entry: ``python -m repro.analysis [--json] [PATHS]``, exit 0 iff clean."""
+import sys
+
+from .runner import main
+
+try:
+    rc = main()
+except BrokenPipeError:
+    # downstream pager/head closed the pipe mid-report; exit quietly but
+    # still nonzero — a truncated report must not read as "clean"
+    sys.stderr.close()
+    rc = 1
+sys.exit(rc)

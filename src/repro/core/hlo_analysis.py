@@ -24,9 +24,8 @@ all-reduces sum their element buffers.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 _DTYPE_BYTES: Dict[str, float] = {
     "pred": 1, "s2": 0.25, "s4": 0.5, "s8": 1, "s16": 2, "s32": 4, "s64": 8,

@@ -9,13 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import os
-from typing import Any, Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.hardware import HardwareSpec, get_hardware
 from repro.core.hlo_analysis import StepCosts
-from repro.core.ridgeline import RidgelineAnalysis, Resource, WorkUnit, analyze
+from repro.core.ridgeline import RidgelineAnalysis, WorkUnit, analyze
 
 
 @dataclasses.dataclass

@@ -53,7 +53,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core.hardware import HardwareSpec
 
@@ -153,7 +153,7 @@ def classify_by_quadrant(work: WorkUnit, hw: HardwareSpec) -> Resource:
     Boundary convention: ties go COMPUTE > MEMORY > NETWORK (a point exactly
     on a ridge attains peak for both resources; we report the "better" one).
     """
-    if work.flops == work.mem_bytes == work.net_bytes == 0:
+    if work.flops == 0 and work.mem_bytes == 0 and work.net_bytes == 0:
         return Resource.COMPUTE  # degenerate empty unit; matches argmax tie-break
     x, y = work.memory_intensity, work.arithmetic_intensity
     x_star, y_star = hw.ridge_memory, hw.ridge_arithmetic

@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.contracts import shape_contract
 from repro.core.hardware import EfficiencyModel, HardwareSpec, get_hardware
 from repro.core.ridgeline import Resource
 from repro.obs import trace
@@ -49,6 +50,7 @@ def _safe_div(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return out
 
 
+@shape_contract("q:(*g) -> (*g)")
 def eff_grid(model: Optional[EfficiencyModel], q: ArrayLike):
     """Vectorized twin of ``EfficiencyModel.eff`` (property-tested against
     the scalar): achievable-fraction-of-peak on a grid of work sizes.
@@ -101,6 +103,10 @@ class SweepResult:
                 for l, c in zip(lab, cnt)}
 
 
+@shape_contract(
+    "flops:(*g), mem_bytes:(*g), net_bytes:(*g), net_steps:(*g), "
+    "peak_flops:(*g), hbm_bw:(*g), net_bw:(*g), alpha_compute:(*g), "
+    "alpha_memory:(*g), alpha_network:(*g) -> (*g)")
 def sweep(flops: ArrayLike, mem_bytes: ArrayLike, net_bytes: ArrayLike,
           hw: Optional[HardwareLike] = None, *,
           peak_flops: Optional[ArrayLike] = None,

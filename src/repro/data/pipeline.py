@@ -17,10 +17,8 @@ decreasing loss so the end-to-end examples demonstrate learning:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import ModelConfig

@@ -47,6 +47,8 @@ from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.contracts import shape_contract
+
 ArrayLike = Union[float, np.ndarray]
 
 #: supported all-reduce algorithm tags
@@ -112,6 +114,7 @@ def _log2_steps(n: ArrayLike) -> np.ndarray:
                         0.0)
 
 
+@shape_contract("(*g), (*g) -> (*g)")
 def all_reduce(payload_bytes: ArrayLike, group_size: ArrayLike,
                algorithm: str = "ring") -> CollectiveCost:
     p = np.asarray(payload_bytes, dtype=np.float64)
@@ -184,6 +187,7 @@ def best_all_reduce(payload_bytes: float, group_size: float, bw: float,
     return best[0], best[1]
 
 
+@shape_contract("(*g), (*g), (*g), (*g) -> (*g), (*g), (*g)")
 def best_all_reduce_grid(payload_bytes: ArrayLike, group_size: ArrayLike,
                          bw: ArrayLike, alpha: ArrayLike = 0.0,
                          algorithms: Sequence[str] = ALGORITHMS,
@@ -277,6 +281,7 @@ def dp_grad_sync_bytes(grad_bytes_per_chip: ArrayLike, dp: ArrayLike,
     return dp_grad_sync(grad_bytes_per_chip, dp, algorithm).wire_bytes
 
 
+@shape_contract("(*g), (*g), (*g) -> (*g)")
 def zero_dp_sync(state_bytes_per_chip: ArrayLike, dp: ArrayLike,
                  stage: ArrayLike) -> CollectiveCost:
     """ZeRO-sharded dp-axis traffic per step (Rajbhandari et al.).
@@ -327,6 +332,7 @@ def tp_act_sync_bytes(act_bytes: ArrayLike, tp: ArrayLike,
                        algorithm).wire_bytes
 
 
+@shape_contract("(*g), (*g) -> (*g)")
 def pp_boundary_bytes(act_bytes: ArrayLike, pp: ArrayLike) -> ArrayLike:
     """Pipeline parallel: point-to-point activations at stage boundaries.
 

@@ -33,7 +33,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ASSIGNED, REGISTRY, get_config
+from repro.configs import ASSIGNED, get_config
 from repro.configs.shapes import SHAPES, ShapeSpec, applicable
 from repro.core import TPU_V5E, analyze_compiled, make_cell_report
 from repro.core.report import CellReport
@@ -252,7 +252,6 @@ def _bf16(tree):
 
 
 def _lower_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh):
-    from repro.train.loop import make_loss_fn
     from repro.models import transformer as lm_mod
     from repro.models import encdec as encdec_mod
     from repro.models import vlm as vlm_mod

@@ -45,6 +45,8 @@ from typing import TYPE_CHECKING, Union
 
 import numpy as np
 
+from repro.analysis.contracts import shape_contract
+
 if TYPE_CHECKING:  # jax-backed; the accounting itself is numpy-only
     from repro.models.common import ModelConfig
 
@@ -105,6 +107,8 @@ class WorkingSet:
                 + self.kv_cache)
 
 
+@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), microbatches:(*g), "
+                "zero_stage:(*g) -> (*g)")
 def training_working_set(cfg: ModelConfig, *, batch: ArrayLike,
                          seq: int = 1, dp: ArrayLike = 1, tp: ArrayLike = 1,
                          pp: ArrayLike = 1, microbatches: ArrayLike = 1,
@@ -142,6 +146,7 @@ def training_working_set(cfg: ModelConfig, *, batch: ArrayLike,
                       kv_cache=zeros)
 
 
+@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g) -> (*g)")
 def decode_working_set(cfg: ModelConfig, *, batch: ArrayLike, seq: int,
                        dp: ArrayLike = 1, tp: ArrayLike = 1,
                        pp: ArrayLike = 1) -> WorkingSet:
@@ -167,6 +172,8 @@ def decode_working_set(cfg: ModelConfig, *, batch: ArrayLike, seq: int,
                       activations=zeros, kv_cache=kv + zeros)
 
 
+@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), microbatches:(*g) "
+                "-> (*g)")
 def min_zero_stage(cfg: ModelConfig, capacity_bytes: float, *,
                    batch: ArrayLike, seq: int = 1, dp: ArrayLike = 1,
                    tp: ArrayLike = 1, pp: ArrayLike = 1,

@@ -10,7 +10,7 @@ mesh axis is implicitly Auto, so the fallback simply omits the argument.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh

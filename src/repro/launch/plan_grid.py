@@ -66,11 +66,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.contracts import shape_contract
 from repro.core import sweep as sweep_mod
 from repro.core.hardware import HardwareSpec, get_hardware
 from repro.distributed import collectives
@@ -265,24 +265,28 @@ class ExplainTerms:
 
     Computed only under ``plan_grid(..., explain=True)``; every array has
     length ``n_candidates``.  The splits are exact complements of the
-    engine's own numbers — ``comp_flops = t_compute − comp_alpha`` etc. —
-    so whichever resource bound a candidate, that resource's terms sum to
-    the priced time (``repro.obs.explain`` builds the per-candidate
+    engine's own numbers — ``comp_flops_s = t_compute − comp_alpha_s``
+    etc. — so whichever resource bound a candidate, that resource's terms
+    sum to the priced time (``repro.obs.explain`` builds the per-candidate
     ``breakdown`` from these; the network side sums to ``t_network`` only
     within float tolerance, because the engine folds the α–β axis times
     through a net_bw multiply/divide round-trip).
+
+    Every field is SECONDS (the ``_s`` suffix is a units-lint declaration):
+    the ``*_bytes_s``/``*_flops_s`` halves are the traffic-over-bandwidth /
+    work-over-ceiling *times*, not the raw traffic.
     """
 
-    comp_alpha: np.ndarray               # α_C·fill dispatch share of t_compute
-    comp_flops: np.ndarray               # F/(peak·eff) share (t_compute − α)
-    mem_alpha: np.ndarray
-    mem_bytes: np.ndarray
-    net_dp_alpha: np.ndarray             # dp grad sync: α·steps (once/step)
-    net_dp_bytes: np.ndarray             # dp grad sync: wire/bw
-    net_tp_alpha: np.ndarray             # tp act syncs: fill·α·steps
-    net_tp_bytes: np.ndarray             # tp act syncs: fill·wire/bw
-    net_pp_alpha: np.ndarray             # pp boundary p2p: fill·α·hops
-    net_pp_bytes: np.ndarray             # pp boundary p2p: fill·bytes/bw
+    comp_alpha_s: np.ndarray             # α_C·fill dispatch share of t_compute
+    comp_flops_s: np.ndarray             # F/(peak·eff) share (t_compute − α)
+    mem_alpha_s: np.ndarray
+    mem_bytes_s: np.ndarray
+    net_dp_alpha_s: np.ndarray           # dp grad sync: α·steps (once/step)
+    net_dp_bytes_s: np.ndarray           # dp grad sync: wire/bw
+    net_tp_alpha_s: np.ndarray           # tp act syncs: fill·α·steps
+    net_tp_bytes_s: np.ndarray           # tp act syncs: fill·wire/bw
+    net_pp_alpha_s: np.ndarray           # pp boundary p2p: fill·α·hops
+    net_pp_bytes_s: np.ndarray           # pp boundary p2p: fill·bytes/bw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -594,6 +598,28 @@ def _capacity_error(cfg: ModelConfig, capacity: float, chips: int,
         + hint)
 
 
+@shape_contract("dp:(*g), tp:(*g), pp:(*g) -> (*g), (*g), (*g)")
+def _pod_masks(dp: np.ndarray, tp: np.ndarray, pp: np.ndarray,
+               pod_size: Optional[int]
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Which mesh axes spill past the pod boundary onto the pod link.
+
+    Extents along the chip grid: tp rides stride 1, pp stride tp, dp
+    stride tp·pp — an axis routes over the pod link when its outermost
+    chip index exceeds ``pod_size``.  Returns ``(dp_pod, tp_pod, pp_pod)``
+    boolean masks of the broadcast candidate shape; ``pod_size=None``
+    (single-pod machine) keeps every axis on the primary link.
+    """
+    if pod_size is None:
+        z = np.zeros(np.broadcast_shapes(np.shape(dp), np.shape(tp),
+                                         np.shape(pp)), dtype=bool)
+        return z, z, z
+    dp_pod = (dp > 1) & (dp * tp * pp > pod_size)
+    pp_pod = (pp > 1) & (pp * tp > pod_size)
+    tp_pod = (tp > 1) & (tp > pod_size)
+    return dp_pod, tp_pod, pp_pod
+
+
 def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
               chips_list: Sequence[int], batch_list: Sequence[int], *,
               seq: int = 1, algorithms: Sequence[str] = ("auto",),
@@ -744,15 +770,10 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     mem_mb = params_bytes / (tp * pp) + 2.0 * stage_layers * act_mb
 
     # --- per-axis link routing as boolean masks ------------------------------
-    # extents: tp rides stride 1, pp stride tp, dp stride tp·pp
-    if pod_size is None:
-        dp_pod = tp_pod = pp_pod = np.zeros(dp.shape, dtype=bool)
-    else:
-        dp_pod = (dp > 1) & (dp * tp * pp > pod_size)
-        pp_pod = (pp > 1) & (pp * tp > pod_size)
-        tp_pod = (tp > 1) & (tp > pod_size)
-        if bool(dp_pod.any() | pp_pod.any() | tp_pod.any()):
-            hw.bandwidth_for(POD_LINK)  # actionable KeyError if spec has none
+    dp_pod, tp_pod, pp_pod = _pod_masks(dp, tp, pp, pod_size)
+    if pod_size is not None and \
+            bool(dp_pod.any() | pp_pod.any() | tp_pod.any()):
+        hw.bandwidth_for(POD_LINK)  # actionable KeyError if spec has none
     bw_pri, a_pri = hw.bandwidth_for(None), hw.alpha_for(None)
     if pod_size is not None and POD_LINK in hw.extra_links:
         bw_pod, a_pod = hw.bandwidth_for(POD_LINK), hw.alpha_for(POD_LINK)
@@ -817,17 +838,19 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     # --- attribution payload (explain=True only; never touches the numbers) --
     explain_terms = prune_reasons = None
     if explain:
-        comp_alpha = np.where(flops_mb > 0, hw.alpha_compute * fill, 0.0)
-        mem_alpha = np.where(mem_mb > 0, hw.alpha_memory * fill, 0.0)
+        comp_alpha_s = np.where(flops_mb > 0, hw.alpha_compute * fill, 0.0)
+        mem_alpha_s = np.where(mem_mb > 0, hw.alpha_memory * fill, 0.0)
         explain_terms = ExplainTerms(
-            comp_alpha=comp_alpha, comp_flops=res.t_compute - comp_alpha,
-            mem_alpha=mem_alpha, mem_bytes=res.t_memory - mem_alpha,
-            net_dp_alpha=dp_alpha * dp_steps,
-            net_dp_bytes=dp_wire / dp_bw,
-            net_tp_alpha=fill * tp_alpha * tp_steps_mb,
-            net_tp_bytes=fill * tp_wire_mb / tp_bw,
-            net_pp_alpha=fill * pp_alpha * pp_steps_mb,
-            net_pp_bytes=fill * pp_bytes_mb / pp_bw)
+            comp_alpha_s=comp_alpha_s,
+            comp_flops_s=res.t_compute - comp_alpha_s,
+            mem_alpha_s=mem_alpha_s,
+            mem_bytes_s=res.t_memory - mem_alpha_s,
+            net_dp_alpha_s=dp_alpha * dp_steps,
+            net_dp_bytes_s=dp_wire / dp_bw,
+            net_tp_alpha_s=fill * tp_alpha * tp_steps_mb,
+            net_tp_bytes_s=fill * tp_wire_mb / tp_bw,
+            net_pp_alpha_s=fill * pp_alpha * pp_steps_mb,
+            net_pp_bytes_s=fill * pp_bytes_mb / pp_bw)
         prune_reasons = {
             (ci, bi): dict(_point_prune_stats(
                 width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,

@@ -12,11 +12,11 @@ used by the §Roofline useful-flops ratio.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.shapes import ShapeSpec
 from repro.distributed.sharding import logical_spec

@@ -12,7 +12,7 @@ logical axes -> mesh axes to build NamedShardings.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ state size ``cfg.ssm_state`` per head.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

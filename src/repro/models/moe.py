@@ -15,7 +15,7 @@ the standard load-balancing auxiliary loss (Switch §4) exposed for training.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

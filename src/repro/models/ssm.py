@@ -22,7 +22,7 @@ but omit the depthwise conv (stub'd as identity) — noted in DESIGN.md.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

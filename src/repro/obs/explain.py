@@ -82,27 +82,27 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
         net = {
             "dp": {"kind": dp_kind, "algo": dp_algo,
                    "link": "pod" if grid.dp_pod[i] else "ici",
-                   "alpha_steps": float(t.net_dp_alpha[i]),
-                   "bytes_over_bw": float(t.net_dp_bytes[i]),
-                   "total": float(t.net_dp_alpha[i] + t.net_dp_bytes[i])},
+                   "alpha_steps": float(t.net_dp_alpha_s[i]),
+                   "bytes_over_bw": float(t.net_dp_bytes_s[i]),
+                   "total": float(t.net_dp_alpha_s[i] + t.net_dp_bytes_s[i])},
             "tp": {"kind": "all_reduce", "algo": tp_algo,
                    "link": "pod" if grid.tp_pod[i] else "ici",
-                   "alpha_steps": float(t.net_tp_alpha[i]),
-                   "bytes_over_bw": float(t.net_tp_bytes[i]),
-                   "total": float(t.net_tp_alpha[i] + t.net_tp_bytes[i])},
+                   "alpha_steps": float(t.net_tp_alpha_s[i]),
+                   "bytes_over_bw": float(t.net_tp_bytes_s[i]),
+                   "total": float(t.net_tp_alpha_s[i] + t.net_tp_bytes_s[i])},
             "pp": {"kind": "p2p", "algo": "-" if pp <= 1 else "send",
                    "link": "pod" if grid.pp_pod[i] else "ici",
-                   "alpha_steps": float(t.net_pp_alpha[i]),
-                   "bytes_over_bw": float(t.net_pp_bytes[i]),
-                   "total": float(t.net_pp_alpha[i] + t.net_pp_bytes[i])},
+                   "alpha_steps": float(t.net_pp_alpha_s[i]),
+                   "bytes_over_bw": float(t.net_pp_bytes_s[i]),
+                   "total": float(t.net_pp_alpha_s[i] + t.net_pp_bytes_s[i])},
         }
         bubble_s = runtime * (pp - 1.0) / fill
         if bound == "compute":
-            breakdown = {"compute_alpha": float(t.comp_alpha[i]),
-                         "compute_flops": float(t.comp_flops[i])}
+            breakdown = {"compute_alpha": float(t.comp_alpha_s[i]),
+                         "compute_flops": float(t.comp_flops_s[i])}
         elif bound == "memory":
-            breakdown = {"memory_alpha": float(t.mem_alpha[i]),
-                         "memory_bytes": float(t.mem_bytes[i])}
+            breakdown = {"memory_alpha": float(t.mem_alpha_s[i]),
+                         "memory_bytes": float(t.mem_bytes_s[i])}
         else:
             dp_tag = "zero_sync" if zero >= 1 else "dp_sync"
             breakdown = {
@@ -125,10 +125,10 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
             "t_network": float(grid.t_network[i]),
             "hbm_bytes": float(grid.hbm_bytes[i]),
             "terms": {
-                "compute": {"alpha": float(t.comp_alpha[i]),
-                            "flops": float(t.comp_flops[i])},
-                "memory": {"alpha": float(t.mem_alpha[i]),
-                           "bytes": float(t.mem_bytes[i])},
+                "compute": {"alpha": float(t.comp_alpha_s[i]),
+                            "flops": float(t.comp_flops_s[i])},
+                "memory": {"alpha": float(t.mem_alpha_s[i]),
+                           "bytes": float(t.mem_bytes_s[i])},
                 "network": net,
             },
             "pipeline_bubble": {"fill": fill,

@@ -182,23 +182,29 @@ def _jsonable(v: Any) -> Any:
 
 _TRACER: Optional[Tracer] = None
 _ATEXIT_REGISTERED = False
+#: guards installs/removals of the process tracer (reads stay lock-free:
+#: span()/count() deliberately snapshot _TRACER once, and a stale snapshot
+#: during a racing disable() just records into the outgoing tracer)
+_STATE_LOCK = threading.Lock()
 
 
 def enable(path: Optional[str] = None) -> Tracer:
     """Install a process-wide tracer (idempotent; updates path if given)."""
     global _TRACER
-    if _TRACER is None:
-        _TRACER = Tracer(path)
-    elif path:
-        _TRACER.path = path
-    return _TRACER
+    with _STATE_LOCK:
+        if _TRACER is None:
+            _TRACER = Tracer(path)
+        elif path:
+            _TRACER.path = path
+        return _TRACER
 
 
 def disable() -> Optional[Tracer]:
     """Remove the process-wide tracer; returns it (unwritten) if there was one."""
     global _TRACER
-    t, _TRACER = _TRACER, None
-    return t
+    with _STATE_LOCK:
+        t, _TRACER = _TRACER, None
+        return t
 
 
 def enabled() -> bool:
@@ -252,9 +258,10 @@ def _init_from_env() -> None:
     path = os.environ.get(TRACE_ENV, "").strip()
     if path:
         enable(path)
-        if not _ATEXIT_REGISTERED:
-            atexit.register(_atexit_write)
-            _ATEXIT_REGISTERED = True
+        with _STATE_LOCK:
+            if not _ATEXIT_REGISTERED:
+                atexit.register(_atexit_write)
+                _ATEXIT_REGISTERED = True
 
 
 _init_from_env()

@@ -8,7 +8,7 @@ sampling helper included for the runnable demos.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,48 @@
+"""Suite-wide defaults: runtime shape contracts ON, silent NaN/inf fatal.
+
+Two hardening knobs the production code keeps off by default are forced on
+for every test run:
+
+- ``REPRO_CHECK=1`` — the ``@shape_contract`` decorators on the vectorized
+  kernels (``repro.analysis.contracts``) enforce their broadcast shapes at
+  runtime.  The env var is set before any ``repro`` import (pytest loads
+  conftest first) and ``set_checking`` is called as a belt-and-braces for
+  anything imported earlier; benchmarks run without this conftest, so the
+  BENCH pins still measure the disabled fast path.
+- ``np.errstate(invalid="raise", divide="raise")`` around the broadcast
+  pricing-pass test modules, so a NaN/inf born *outside* the engine's
+  deliberate ``errstate`` guards (``core/sweep._safe_div`` and friends,
+  which locally ignore-and-repair) fails the test instead of flowing into
+  a ranking.  Scoped to those modules because timer/measure tests create
+  NaN on purpose (degenerate-sample spreads).
+"""
+import os
+
+os.environ.setdefault("REPRO_CHECK", "1")
+
+import numpy as np
+import pytest
+
+from repro.analysis import contracts
+
+if os.environ["REPRO_CHECK"] not in ("", "0"):
+    contracts.set_checking(True)
+
+#: broadcast pricing passes: any NaN/inf that escapes a deliberate
+#: errstate guard in these modules' code under test is a bug
+_ERRSTATE_RAISE_MODULES = {
+    "tests.test_plan_grid", "test_plan_grid",
+    "tests.test_sweep", "test_sweep",
+    "tests.test_memory", "test_memory",
+    "tests.test_collectives", "test_collectives",
+}
+
+
+@pytest.fixture(autouse=True)
+def _raise_on_silent_nan(request):
+    mod = getattr(request, "module", None)
+    if mod is not None and mod.__name__ in _ERRSTATE_RAISE_MODULES:
+        with np.errstate(invalid="raise", divide="raise"):
+            yield
+    else:
+        yield

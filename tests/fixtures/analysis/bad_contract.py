@@ -1,0 +1,26 @@
+"""Known-bad corpus for the contract lint (AST-only — never imported).
+
+Importing this file would raise at decoration time (specs parse eagerly);
+the static pass must report the same defects without importing.
+"""
+from repro.analysis.contracts import shape_contract
+
+
+@shape_contract("(c,a) -> (c,b)")               # -> contract-bad-spec
+def output_axis_unbound(x):
+    return x
+
+
+@shape_contract("(c,), (a,) -> (c,)")           # -> contract-arity
+def more_operands_than_params(x):
+    return x
+
+
+@shape_contract("q:(c,) -> (c,)")               # -> contract-unknown-param
+def names_missing_param(x):
+    return x
+
+
+@shape_contract("x:(c,), x:(c,) -> (c,)")       # -> contract-duplicate-param
+def names_param_twice(x):
+    return x

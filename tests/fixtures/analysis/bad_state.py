@@ -1,0 +1,35 @@
+"""Known-bad corpus for the global-state lint (AST-only — never imported)."""
+import threading
+
+_CACHE = {}
+_RESULTS = []
+_SINGLETON = None
+_LOCK = threading.Lock()
+
+
+def remember(key, value):
+    _CACHE[key] = value                         # -> state-unlocked-mutation
+
+
+def accumulate(value):
+    _RESULTS.append(value)                      # -> state-unlocked-mutation
+
+
+def install(x):
+    global _SINGLETON
+    _SINGLETON = x                              # -> state-unlocked-global
+
+
+def install_locked(x):
+    # held lock: must NOT fire
+    global _SINGLETON
+    with _LOCK:
+        _SINGLETON = x
+        _CACHE["latest"] = x
+
+
+class Holder:
+    def __init__(self):
+        # __init__ is exempt: the object under construction is unshared
+        self.slots = {}
+        _CACHE.setdefault("holders", 0)

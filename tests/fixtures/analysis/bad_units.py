@@ -1,0 +1,41 @@
+"""Known-bad corpus for the units lint (AST-only — never imported).
+
+Each function below must fire exactly the rule named in its comment;
+``tests/test_analysis.py`` asserts the full expected set, so an analyzer
+change that silently stops detecting one of these fails the suite.
+"""
+
+
+def add_flops_to_bytes(work):
+    return work.flops + work.mem_bytes          # -> unit-mismatch (add)
+
+
+def subtract_rate_from_time(step_s, link_bw):
+    return step_s - link_bw                     # -> unit-mismatch (sub)
+
+
+def compare_time_to_traffic(step_s, wire_bytes):
+    return step_s > wire_bytes                  # -> unit-mismatch (compare)
+
+
+def mislabeled_assignment(step_s):
+    total_bytes = step_s                        # -> unit-bad-assign
+    return total_bytes
+
+
+def wrong_collective_payload(step_s, collectives):
+    return collectives.all_reduce(step_s, 8)    # -> unit-bad-arg
+
+
+def alpha_for(wire_bytes):
+    return wire_bytes                           # -> unit-bad-return (wants s)
+
+
+def empty_suppression(step_s, wire_bytes):
+    return step_s + wire_bytes  # unit: ignore[]
+    # the empty reason above is itself a finding -> bad-suppression
+
+
+def justified_suppression(step_s, wire_bytes):
+    # a reasoned suppression silences the mismatch (round-trip test)
+    return step_s + wire_bytes  # unit: ignore[fixture: demonstrates a reasoned suppression]

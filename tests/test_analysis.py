@@ -1,0 +1,258 @@
+"""repro.analysis: unit algebra properties, fixture corpus, runtime contracts.
+
+The two acceptance properties pinned here: every rule family provably fires
+on its known-bad fixture file (``tests/fixtures/analysis/``), and the
+analyzer exits 0 on the real ``src/repro`` tree — together they keep the CI
+gate honest (a gate that can't fail proves nothing; a gate that fails on
+main blocks everyone).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import contracts, report, runner
+from repro.analysis.contracts import (ShapeContractError, parse_contract,
+                                      shape_contract)
+from repro.analysis.units import (BYTES, BYTES_PER_S, DIMENSIONLESS, FLOPS,
+                                  FLOPS_PER_S, NAMED_UNITS, SECONDS, Unit,
+                                  UnitError, parse_unit)
+from tests._hypothesis_compat import given, settings, st
+
+HERE = os.path.dirname(__file__)
+FIXTURES = os.path.join(HERE, "fixtures", "analysis")
+SRC_REPRO = os.path.join(HERE, os.pardir, "src", "repro")
+
+UNIT_NAMES = sorted(NAMED_UNITS)
+
+
+# --- unit algebra (property-tested) -------------------------------------------
+
+
+@settings(max_examples=50)
+@given(a=st.sampled_from(UNIT_NAMES), b=st.sampled_from(UNIT_NAMES))
+def test_commensurability_is_symmetric(a, b):
+    ua, ub = parse_unit(a), parse_unit(b)
+    assert ua.commensurable(ub) == ub.commensurable(ua)
+
+
+@settings(max_examples=50)
+@given(a=st.sampled_from(UNIT_NAMES), b=st.sampled_from(UNIT_NAMES))
+def test_mul_commutes_and_div_inverts(a, b):
+    ua, ub = parse_unit(a), parse_unit(b)
+    assert ua * ub == ub * ua
+    assert (ua * ub) / ub == ua
+    assert ua / ua == DIMENSIONLESS
+
+
+@settings(max_examples=50)
+@given(name=st.sampled_from(UNIT_NAMES))
+def test_named_units_round_trip_through_str(name):
+    u = parse_unit(name)
+    assert parse_unit(str(u)) == u
+
+
+def test_division_produces_the_model_rates():
+    # the three derivations the cost model lives on
+    assert BYTES / BYTES_PER_S == SECONDS
+    assert FLOPS / FLOPS_PER_S == SECONDS
+    assert BYTES / SECONDS == BYTES_PER_S
+    # the ridge point is flops/byte — unnamed but printable and parseable
+    ridge = FLOPS / BYTES
+    assert parse_unit(str(ridge)) == ridge
+    assert not ridge.commensurable(FLOPS)
+
+
+def test_unit_power_and_errors():
+    assert SECONDS ** 2 / SECONDS == SECONDS
+    assert SECONDS ** 0 == DIMENSIONLESS
+    with pytest.raises(UnitError, match="vocabulary"):
+        parse_unit("furlongs")
+    with pytest.raises(UnitError):
+        Unit.of(s=1) ** 1.5
+
+
+# --- suppressions -------------------------------------------------------------
+
+
+def test_suppression_round_trip(tmp_path):
+    src = ("def f(step_s, wire_bytes):\n"
+           "    bad = step_s + wire_bytes\n"
+           "    ok = step_s + wire_bytes  # unit: ignore[testing the table]\n")
+    p = tmp_path / "mod.py"
+    p.write_text(src)
+    findings, suppressed = runner.check_file(str(p))
+    assert [f.rule for f in findings] == ["unit-mismatch"]
+    assert findings[0].line == 2
+    assert len(suppressed) == 1
+    assert suppressed[0]["suppressed_reason"] == "testing the table"
+    assert suppressed[0]["line"] == 3
+
+
+def test_empty_suppression_is_a_finding(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text("x = 1  # state: ignore[]\n")
+    findings, _ = runner.check_file(str(p))
+    assert [f.rule for f in findings] == ["bad-suppression"]
+    assert "needs a reason" in findings[0].message
+
+
+def test_suppression_only_silences_its_family(tmp_path):
+    # a state suppression must not hide a unit finding on the same line
+    p = tmp_path / "mod.py"
+    p.write_text("def f(step_s, wire_bytes):\n"
+                 "    return step_s + wire_bytes  # state: ignore[wrong family]\n")
+    findings, suppressed = runner.check_file(str(p))
+    assert [f.rule for f in findings] == ["unit-mismatch"]
+    assert suppressed == []
+
+
+# --- fixture corpus: every rule family provably fires -------------------------
+
+
+def _rules(path):
+    findings, suppressed = runner.check_file(path)
+    return findings, suppressed, {f.rule for f in findings}
+
+
+def test_units_rules_fire_on_fixture():
+    findings, suppressed, rules = _rules(os.path.join(FIXTURES, "bad_units.py"))
+    assert {"unit-mismatch", "unit-bad-assign", "unit-bad-arg",
+            "unit-bad-return", "bad-suppression"} <= rules
+    # add, sub, and compare mismatches are distinct sites
+    assert sum(f.rule == "unit-mismatch" for f in findings) >= 3
+    # the reasoned suppression round-trips into the suppressed list
+    assert any("reasoned suppression" in s["suppressed_reason"]
+               for s in suppressed)
+
+
+def test_contract_rules_fire_on_fixture():
+    _, _, rules = _rules(os.path.join(FIXTURES, "bad_contract.py"))
+    assert {"contract-bad-spec", "contract-arity", "contract-unknown-param",
+            "contract-duplicate-param"} <= rules
+
+
+def test_state_rules_fire_on_fixture():
+    findings, _, rules = _rules(os.path.join(FIXTURES, "bad_state.py"))
+    assert {"state-unlocked-global", "state-unlocked-mutation"} <= rules
+    # the lock-held writes and the __init__ write must NOT fire
+    flagged_lines = {f.line for f in findings}
+    src = open(os.path.join(FIXTURES, "bad_state.py")).read().splitlines()
+    for lineno, text in enumerate(src, start=1):
+        if "must NOT fire" in text or "exempt" in text:
+            continue
+        if "with _LOCK" in text:
+            assert not any(lineno < ln <= lineno + 2 for ln in flagged_lines)
+
+
+def test_analyzer_clean_on_real_tree(capsys):
+    rc = runner.main([SRC_REPRO])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 finding(s)" in out
+
+
+def test_cli_json_schema(capsys):
+    rc = runner.main(["--json", os.path.join(FIXTURES, "bad_state.py")])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["schema"] == report.SCHEMA
+    assert doc["n_findings"] == len(doc["findings"]) > 0
+    for f in doc["findings"]:
+        assert set(f) == {"path", "line", "col", "rule", "family", "message"}
+
+
+@pytest.mark.slow
+def test_module_entrypoint_exit_codes():
+    env = dict(os.environ, PYTHONPATH="src")
+    ok = subprocess.run([sys.executable, "-m", "repro.analysis", "src/repro"],
+                        cwd=os.path.join(HERE, os.pardir), env=env,
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run([sys.executable, "-m", "repro.analysis",
+                          os.path.join("tests", "fixtures", "analysis")],
+                         cwd=os.path.join(HERE, os.pardir), env=env,
+                         capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "bad_units.py" in bad.stdout
+
+
+# --- runtime shape contracts --------------------------------------------------
+
+
+@pytest.fixture
+def checking_on():
+    prev = contracts.set_checking(True)
+    yield
+    contracts.set_checking(prev)
+
+
+def test_parse_contract_accepts_the_shipped_grammar():
+    c = parse_contract("(c,), (c,a) -> (c,a)")
+    assert [s.axes for s in c.inputs] == [("c",), ("c", "a")]
+    c = parse_contract("batch:(*g), dp:(*g) -> (*g)")
+    assert all(s.is_group for s in c.inputs)
+    assert c.inputs[0].param == "batch"
+    with pytest.raises(ValueError, match="->"):
+        parse_contract("(c,)")
+    with pytest.raises(ValueError, match="not bound"):
+        parse_contract("(c,) -> (d,)")
+
+
+def test_named_axis_contract_enforced(checking_on):
+    @shape_contract("(c,), (c,a) -> (c,a)")
+    def outer(wire, per_algo):
+        return wire[:, None] * per_algo
+
+    out = outer(np.zeros(3), np.zeros((3, 4)))
+    assert out.shape == (3, 4)
+    outer(np.zeros(1), np.zeros((3, 4)))      # size-1 broadcasts fine
+    with pytest.raises(ShapeContractError, match="axis 'c'"):
+        outer(np.zeros(3), np.zeros((5, 4)))
+
+
+def test_group_contract_enforced_on_real_kernel(checking_on):
+    from repro.distributed import collectives
+    wire, steps, idx = collectives.best_all_reduce_grid(
+        np.full(4, 1e9), np.full(4, 8.0), 1e11, 1e-6)
+    assert wire.shape == steps.shape == idx.shape == (4,)
+    with pytest.raises(ShapeContractError):
+        collectives.best_all_reduce_grid(
+            np.full(3, 1e9), np.full(4, 8.0), 1e11, 1e-6)
+
+
+def test_contract_disabled_is_transparent():
+    prev = contracts.set_checking(False)
+    try:
+        from repro.distributed import collectives
+        with pytest.raises(ValueError):
+            # numpy itself raises eventually, but no ShapeContractError
+            try:
+                collectives.best_all_reduce_grid(
+                    np.full(3, 1e9), np.full(4, 8.0), 1e11, 1e-6)
+            except ShapeContractError:  # pragma: no cover
+                pytest.fail("contract fired while disabled")
+    finally:
+        contracts.set_checking(prev)
+
+
+def test_wrapper_preserves_identity_and_exposes_contract():
+    from repro.distributed import collectives
+    fn = collectives.best_all_reduce_grid
+    assert fn.__name__ == "best_all_reduce_grid"
+    assert fn.__wrapped__ is not None
+    assert fn.__shape_contract__.spec.startswith("(*g)")
+
+
+def test_bad_contract_raises_at_decoration_time():
+    with pytest.raises(ValueError, match="not bound"):
+        @shape_contract("(c,) -> (d,)")
+        def f(x):
+            return x
+    with pytest.raises(ValueError, match="does not take"):
+        @shape_contract("q:(c,) -> (c,)")
+        def g(x):
+            return x

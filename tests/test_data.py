@@ -1,6 +1,5 @@
 """Data pipeline: determinism, host sharding, learnability signal."""
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced
 from repro.data.pipeline import DataConfig, SyntheticLMStream, make_stream

@@ -1,7 +1,7 @@
 """Collective-byte parsing over real (captured) partitioned-HLO text."""
 import pytest
 
-from repro.core.hlo_analysis import (CollectiveSummary, _parse_groups,
+from repro.core.hlo_analysis import (_parse_groups,
                                      _shape_bytes, parse_collectives)
 
 # real lines captured from jax 0.8.2 XLA:CPU SPMD output on 8 fake devices

@@ -1,5 +1,4 @@
 """The production launchers run end-to-end on CPU (reduced configs)."""
-import sys
 
 import pytest
 

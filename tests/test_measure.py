@@ -14,7 +14,7 @@ from repro.core.hardware import (CALIBRATION_SCHEMA, HardwareSpec,
                                  get_hardware, list_hardware,
                                  load_calibrated, spec_from_calibration)
 from repro.core.ridgeline import WorkUnit
-from repro.measure.calibrate import Calibration, fit_ceilings
+from repro.measure.calibrate import fit_ceilings
 from repro.measure.microbench import Measurement
 from repro.measure.timers import (TimingStats, block_until_ready,
                                   robust_stats, time_callable)

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.optim.compression import (CompressorState, Int8Compressor,
+from repro.optim.compression import (Int8Compressor,
                                      TopKCompressor)
 from repro.optim.optimizer import (SGD, AdamW, apply_updates, global_norm,
                                    warmup_cosine)
@@ -88,7 +88,6 @@ class TestInt8Compression:
 
     @pytest.mark.slow
     def test_training_with_compression_still_converges(self):
-        from repro.train.loop import TrainStepConfig
         from repro.optim.compression import StatelessRoundTrip
         comp = StatelessRoundTrip(Int8Compressor(chunk=128))
         opt = AdamW(learning_rate=0.1, weight_decay=0.0)

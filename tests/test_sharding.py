@@ -1,7 +1,6 @@
 """Logical-axis sharding rules: dedupe, divisibility fallback, GQA rules."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (DEFAULT_RULES, _drop_nondividing,

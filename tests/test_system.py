@@ -8,7 +8,7 @@ import pytest
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_reduced
 from repro.data.pipeline import DataConfig, make_stream
-from repro.optim.optimizer import AdamW, warmup_cosine
+from repro.optim.optimizer import AdamW
 from repro.train.fault_tolerance import (ResilientRunner, RunnerConfig,
                                          SimulatedFailure, StragglerEvent)
 from repro.train.loop import TrainStepConfig, build_train_step, init_train_state
