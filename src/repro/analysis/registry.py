@@ -83,6 +83,8 @@ ATTR_UNITS: Dict[str, Unit] = {
     "net_tp_bytes_s": SECONDS,
     "net_pp_alpha_s": SECONDS,
     "net_pp_bytes_s": SECONDS,
+    "net_ep_alpha_s": SECONDS,
+    "net_ep_bytes_s": SECONDS,
     # dimensionless
     "net_steps": DIMENSIONLESS,
     "steps": DIMENSIONLESS,
@@ -100,8 +102,11 @@ RETURN_UNITS: Dict[str, object] = {
     "effective_peak": FLOPS_PER_S,
     "resource_times": (SECONDS, SECONDS, SECONDS),
     "param_counts": (DIMENSIONLESS, DIMENSIONLESS),
+    "expert_param_counts": (DIMENSIONLESS, DIMENSIONLESS),
     "best_all_reduce_grid": (BYTES, DIMENSIONLESS, None),
     "zero_dp_sync": None,             # returns CollectiveCost (object)
+    "ep_dispatch_combine": None,      # returns CollectiveCost (object)
+    "moe_routing_derate": DIMENSIONLESS,
     "pp_boundary_bytes": BYTES,
     "eff": DIMENSIONLESS,
     "eff_grid": DIMENSIONLESS,
@@ -128,6 +133,10 @@ PARAM_UNITS: Dict[str, Tuple[Tuple[str, Optional[Unit]], ...]] = {
     "zero_dp_sync": (("state_bytes_per_chip", BYTES), ("dp", DIMENSIONLESS),
                      ("stage", DIMENSIONLESS)),
     "pp_boundary_bytes": (("act_bytes", BYTES), ("pp", DIMENSIONLESS)),
+    "ep_dispatch_combine": (("payload_bytes", BYTES),
+                            ("ep", DIMENSIONLESS)),
+    "moe_routing_derate": (("ep", DIMENSIONLESS),
+                           ("tokens_mb", DIMENSIONLESS)),
     "time": (("link_bw", BYTES_PER_S), ("alpha", SECONDS)),
 }
 
@@ -147,6 +156,8 @@ SUFFIX_UNITS: Dict[str, object] = {
     "_steps": DIMENSIONLESS,
     "steps": DIMENSIONLESS,
     "_eff": DIMENSIONLESS,
+    "_derate": DIMENSIONLESS,
+    "derate": DIMENSIONLESS,
     # scale-shifted: same dimension, wrong scale — excluded, never inferred
     "_gb": EXCLUDED,
     "_gib": EXCLUDED,

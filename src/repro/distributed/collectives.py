@@ -146,6 +146,7 @@ def all_gather(payload_bytes: ArrayLike,
     return reduce_scatter(payload_bytes, group_size)
 
 
+@shape_contract("(*g), (*g) -> (*g)")
 def all_to_all(payload_bytes: ArrayLike,
                group_size: ArrayLike) -> CollectiveCost:
     """payload = per-chip resident bytes; each chip keeps 1/n of it local."""
@@ -330,6 +331,21 @@ def tp_act_sync_bytes(act_bytes: ArrayLike, tp: ArrayLike,
                       algorithm: str = "ring") -> ArrayLike:
     return tp_act_sync(act_bytes, tp, syncs_per_layer, n_layers,
                        algorithm).wire_bytes
+
+
+@shape_contract("(*g), (*g) -> (*g)")
+def ep_dispatch_combine(payload_bytes: ArrayLike,
+                        ep: ArrayLike) -> CollectiveCost:
+    """Expert parallel: dispatch + combine all-to-alls, per MoE layer.
+
+    ``payload_bytes`` is the per-chip routed-token buffer (tokens · k ·
+    capacity_factor · width · act bytes, after any routing-imbalance
+    derate); each MoE layer pays one all-to-all to scatter tokens to
+    their experts' chips and a second to bring the expert outputs home —
+    2·(ep−1)/ep · payload wire bytes, 2·(ep−1) serialized hops.  A size-1
+    ep group runs no collective and costs exactly zero (wire and steps).
+    """
+    return all_to_all(payload_bytes, ep).scaled(2.0)
 
 
 @shape_contract("(*g), (*g) -> (*g)")

@@ -10,11 +10,17 @@ nothing downstream.
 Training footprint per chip (fp32 master weights + AdamW, matching
 ``models/common`` / ``optim/optimizer``):
 
-    params      4 B/param · N / (tp·pp)            [/ dp at ZeRO-3]
-    grads       4 B/param · N / (tp·pp)            [/ dp at ZeRO-2+]
-    optimizer   8 B/param · N / (tp·pp)  (μ + ν)   [/ dp at ZeRO-1+]
-    activations coeff · (L/pp) · tokens/(dp·m) · width · act_B / tp
+    params      4 B/param · N_ep / (tp·pp)         [/ dp at ZeRO-3]
+    grads       4 B/param · N_ep / (tp·pp)         [/ dp at ZeRO-2+]
+    optimizer   8 B/param · N_ep / (tp·pp)  (μ+ν)  [/ dp at ZeRO-1+]
+    activations coeff · ceil(L/pp) · tokens/(dp·m) · width · act_B / tp
                   · min(m, pp)  in-flight 1F1B microbatches
+
+where ``N_ep = (N − N_experts) + N_experts/ep``: the routed expert
+tensors (``launch/specs.expert_param_counts``) shard across the
+expert-parallel axis while the dense remainder replicates over it, and
+``ceil(L/pp)`` charges the widest stage when pp ∤ n_layers (uneven
+ceil-split; exact L/pp when pp divides the stack).
 
 where ``coeff`` is 2 saved boundary tensors per layer, dropping to 1 under
 rematerialization (only the block boundary survives; everything else is
@@ -107,29 +113,44 @@ class WorkingSet:
                 + self.kv_cache)
 
 
-@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), microbatches:(*g), "
-                "zero_stage:(*g) -> (*g)")
+@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), ep:(*g), "
+                "microbatches:(*g), zero_stage:(*g) -> (*g)")
 def training_working_set(cfg: ModelConfig, *, batch: ArrayLike,
                          seq: int = 1, dp: ArrayLike = 1, tp: ArrayLike = 1,
-                         pp: ArrayLike = 1, microbatches: ArrayLike = 1,
+                         pp: ArrayLike = 1, ep: ArrayLike = 1,
+                         microbatches: ArrayLike = 1,
                          zero_stage: ArrayLike = 0,
                          remat: bool = False) -> WorkingSet:
-    """Per-chip training footprint of a (dp, tp, pp, m, zero) candidate.
+    """Per-chip training footprint of a (dp, tp, pp, ep, m, zero) candidate.
 
     All mesh arguments broadcast elementwise (the planner passes its flat
     candidate arrays); scalars price one candidate.  ``zero_stage`` shards
     optimizer states (≥1), gradients (≥2), parameters (≥3) across dp.
+    ``ep`` shards the routed expert tensors (and their grads/optimizer
+    states, via the same ``shard`` slice) across the expert-parallel axis;
+    the dense remainder — attention, router, shared experts — replicates
+    over ep exactly as before, so ep = 1 reproduces the prior accounting
+    bit-for-bit.
     """
     from repro.launch.plan_grid import param_counts
     n_total, _ = param_counts(cfg)
     dp = _as_f64(dp)
     tp = _as_f64(tp)
     pp = _as_f64(pp)
+    ep = _as_f64(ep)
     m = _as_f64(microbatches)
     zero = _as_f64(zero_stage)
     batch = _as_f64(batch)
 
     shard = n_total / (tp * pp)                 # this chip's model slice
+    if (ep > 1.0).any():
+        from repro.launch.specs import expert_param_counts
+        e_total, _ = expert_param_counts(cfg)
+        if e_total > 0.0:
+            # the np.where overlay leaves every ep = 1 lane bit-untouched
+            shard = np.where(
+                ep > 1.0,
+                ((n_total - e_total) + e_total / ep) / (tp * pp), shard)
     params = PARAM_BYTES * shard / np.where(zero >= 3, dp, 1.0)
     grads = GRAD_BYTES * shard / np.where(zero >= 2, dp, 1.0)
     opt = OPT_BYTES * shard / np.where(zero >= 1, dp, 1.0)
@@ -137,7 +158,8 @@ def training_working_set(cfg: ModelConfig, *, batch: ArrayLike,
     tokens = _tokens(cfg, batch, seq)
     coeff = ACT_COEFF_REMAT if remat else ACT_COEFF
     inflight = np.minimum(m, pp)                # 1F1B holds ≤ pp microbatches
-    acts = (coeff * (float(cfg.n_layers) / pp)
+    # ceil: when pp ∤ n_layers the widest (first) stages bound the budget
+    acts = (coeff * np.ceil(float(cfg.n_layers) / pp)
             * (tokens / (dp * m)) * float(_model_width(cfg))
             * _act_bytes_per_token(cfg) / tp * inflight)
     zeros = np.zeros(np.broadcast_shapes(params.shape, acts.shape))
@@ -172,11 +194,11 @@ def decode_working_set(cfg: ModelConfig, *, batch: ArrayLike, seq: int,
                       activations=zeros, kv_cache=kv + zeros)
 
 
-@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), microbatches:(*g) "
-                "-> (*g)")
+@shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), ep:(*g), "
+                "microbatches:(*g) -> (*g)")
 def min_zero_stage(cfg: ModelConfig, capacity_bytes: float, *,
                    batch: ArrayLike, seq: int = 1, dp: ArrayLike = 1,
-                   tp: ArrayLike = 1, pp: ArrayLike = 1,
+                   tp: ArrayLike = 1, pp: ArrayLike = 1, ep: ArrayLike = 1,
                    microbatches: ArrayLike = 1,
                    remat: bool = False) -> np.ndarray:
     """Smallest ZeRO stage at which each candidate fits; 4 when none does.
@@ -186,13 +208,13 @@ def min_zero_stage(cfg: ModelConfig, capacity_bytes: float, *,
     ``capacity_bytes <= 0`` (unknown) makes everything stage 0.
     """
     shape = np.broadcast_shapes(*(np.shape(_as_f64(a)) for a in
-                                  (batch, dp, tp, pp, microbatches)))
+                                  (batch, dp, tp, pp, ep, microbatches)))
     if capacity_bytes <= 0:
         return np.zeros(shape, dtype=np.int64)
     totals = np.stack([
         training_working_set(cfg, batch=batch, seq=seq, dp=dp, tp=tp, pp=pp,
-                             microbatches=microbatches, zero_stage=stage,
-                             remat=remat).total
+                             ep=ep, microbatches=microbatches,
+                             zero_stage=stage, remat=remat).total
         for stage in range(4)])
     fits = totals <= capacity_bytes
     return np.where(fits.any(axis=0), fits.argmax(axis=0), 4).astype(np.int64)

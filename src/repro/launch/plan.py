@@ -50,6 +50,9 @@ CLI::
     python -m repro.launch.plan --arch dlrm-mlp --chips 32 --pod-size 16
     python -m repro.launch.plan --arch qwen2-7b --chips 32 --algo all
     python -m repro.launch.plan --arch qwen2-7b --chips 64 --pp 8
+    python -m repro.launch.plan --arch qwen2-moe-a2.7b --chips 16 --ep 4
+    python -m repro.launch.plan --arch qwen2-7b --chips 64 --pp 8 \\
+        --interleave 2
     python -m repro.launch.plan --arch dlrm-mlp --chips-grid 8,16,32,64 \\
         --batch-grid 256,512,1024 --pp 4
     python -m repro.launch.plan --arch dlrm-mlp --chips 16 --calibrated --json
@@ -126,10 +129,11 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
          batch: int, seq: int = 1,
          algorithms: Sequence[str] = ("auto",),
          pod_size: Optional[int] = None,
-         max_pp: int = 1, zero_stages: Sequence[int] = (0,),
+         max_pp: int = 1, max_ep: int = 1, interleave: int = 1,
+         zero_stages: Sequence[int] = (0,),
          remat: bool = False, check_capacity: bool = True
          ) -> List[MeshPlan]:
-    """Rank every feasible (dp, tp, pp, m, algorithm) by projected step time.
+    """Rank every feasible (dp, tp, pp, ep, m, algorithm) by step time.
 
     A single-point slice of :func:`repro.launch.plan_grid.plan_grid` (one
     chips budget, one batch) — same evaluation core, same numbers.
@@ -143,7 +147,10 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     the full menu, so the dp grad sync and the tp act syncs can pick
     different algorithms on the same candidate.  ``max_pp`` admits
     pipeline-parallel axes up to that many stages (1 = the classic
-    dp × tp space).
+    dp × tp space); ``max_ep`` admits expert-parallel axes dividing the
+    padded expert count (MoE configs only — see
+    :func:`repro.launch.plan_grid.plan_grid`); ``interleave`` prices the
+    interleaved-1F1B schedule with that many virtual stages per chip.
 
     ``zero_stages``/``remat``/``check_capacity`` are the memory-feasibility
     controls (see :func:`repro.launch.plan_grid.plan_grid`): when the spec
@@ -153,6 +160,7 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     """
     grid = plan_grid(cfg, hw, [chips], [batch], seq=seq,
                      algorithms=algorithms, pod_size=pod_size, max_pp=max_pp,
+                     max_ep=max_ep, interleave=interleave,
                      zero_stages=zero_stages, remat=remat,
                      check_capacity=check_capacity)
     return grid.plans()
@@ -196,12 +204,14 @@ def best_step_time(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
                    batch: int, seq: int = 1,
                    algorithms: Sequence[str] = ("auto",),
                    pod_size: Optional[int] = None,
-                   max_pp: int = 1, zero_stages: Sequence[int] = (0,),
+                   max_pp: int = 1, max_ep: int = 1, interleave: int = 1,
+                   zero_stages: Sequence[int] = (0,),
                    remat: bool = False,
                    check_capacity: bool = True) -> float:
     return plan(cfg, hw, chips, batch=batch, seq=seq,
                 algorithms=algorithms, pod_size=pod_size,
-                max_pp=max_pp, zero_stages=zero_stages, remat=remat,
+                max_pp=max_pp, max_ep=max_ep, interleave=interleave,
+                zero_stages=zero_stages, remat=remat,
                 check_capacity=check_capacity)[0].runtime
 
 
@@ -228,7 +238,8 @@ def to_cell_reports(arch: str, plans: Sequence[MeshPlan], hw: HardwareSpec,
             tokens_per_step=tokens, variant=p.algo_label,
             notes=f"rank by plan; {p.algorithm}->{p.algo_label}; links "
                   f"{p.dp_link}/{p.tp_link}"
-                  + (f"; pp{p.pp} m{p.microbatches}" if p.pp > 1 else ""))
+                  + (f"; pp{p.pp} m{p.microbatches}" if p.pp > 1 else "")
+                  + (f"; ep{p.ep} a2a on {p.ep_link}" if p.ep > 1 else ""))
         reports.append(rep.finalize(hw))
     return reports
 
@@ -240,11 +251,13 @@ def _fmt_ms(s: float) -> str:
 def format_plan_table(plans: Sequence[MeshPlan]) -> str:
     banded = any(p.runtime_hi > p.runtime for p in plans)
     piped = any(p.pp > 1 for p in plans)
+    eped = any(p.ep > 1 for p in plans)
     zeroed = any(p.zero_stage > 0 for p in plans)
     capped = any(p.hbm_bytes > 0 for p in plans)
     misfit = any(not p.fits for p in plans)
     head = (f"{'rank':>4} {'mesh':>12} "
             + (f"{'pp':>3} {'mb':>4} " if piped else "")
+            + (f"{'ep':>3} " if eped else "")
             + (f"{'z':>2} " if zeroed else "")
             + f"{'algo':>10} {'t_comp ms':>9} "
             f"{'t_mem ms':>9} {'t_net ms':>9} {'step ms':>9} "
@@ -261,6 +274,7 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
             f"{p.dp_link}/{p.tp_link}"
         lines.append(
             f"{i + 1:>4} {p.mesh:>12} " + pipe
+            + (f"{p.ep:>3} " if eped else "")
             + (f"{p.zero_stage:>2} " if zeroed else "")
             + f"{p.algo_label:>10} "
             f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
@@ -408,6 +422,17 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                          "budget) are skipped, and 1F1B microbatch counts "
                          "are searched automatically (default 1 = no "
                          "pipeline axis)")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="max expert-parallel axis size to search; ep must "
+                         "divide the padded expert count E_pad = "
+                         "max(n_experts, pad_experts_to), so this only "
+                         "widens the space for MoE archs (default 1 = no "
+                         "ep axis)")
+    ap.add_argument("--interleave", type=int, default=1,
+                    help="interleaved-1F1B virtual stages per chip: divides "
+                         "the pipeline ramp bubble by min(N, layers/pp) at "
+                         "the cost of that many times the boundary p2p "
+                         "traffic (default 1 = classic 1F1B)")
     ap.add_argument("--chips-grid", default=None,
                     help="comma list of chip budgets -> grid mode "
                          "(one vectorized pass over every point)")
@@ -504,7 +529,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             batch_list = _parse_grid(args.batch_grid, "batch-grid") or [batch]
             grid = plan_grid(cfg, hw, chips_list, batch_list, seq=args.seq,
                              algorithms=algos, pod_size=args.pod_size,
-                             max_pp=args.pp, zero_stages=zero_stages,
+                             max_pp=args.pp, max_ep=args.ep,
+                             interleave=args.interleave,
+                             zero_stages=zero_stages,
                              remat=args.remat,
                              check_capacity=check_capacity,
                              explain=args.explain)
@@ -533,6 +560,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                 "batch_grid": list(grid.batch_list),
                 "seq": None if cfg.family == "mlp" else args.seq,
                 "pod_size": args.pod_size, "max_pp": args.pp,
+                "max_ep": args.ep, "interleave": args.interleave,
                 "algo": args.algo, "algorithms": list(algos),
                 "zero_stages": list(grid.zero_stages),
                 "remat": grid.remat,
@@ -551,6 +579,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
               f"chips {list(grid.chips_list)} x batch {list(grid.batch_list)}"
               + ("" if cfg.family == "mlp" else f", seq={args.seq}")
               + f", algo={args.algo}, max_pp={args.pp}"
+              + (f", max_ep={args.ep}" if args.ep > 1 else "")
+              + (f", interleave={args.interleave}"
+                 if args.interleave > 1 else "")
               + (f", zero={args.zero}" if args.zero != "0" else "")
               + (", remat" if args.remat else "")
               + f" ({grid.n_candidates} candidates, one pass)")
@@ -570,7 +601,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     try:
         grid = plan_grid(cfg, hw, [args.chips], [batch], seq=args.seq,
                          algorithms=algos, pod_size=args.pod_size,
-                         max_pp=args.pp, zero_stages=zero_stages,
+                         max_pp=args.pp, max_ep=args.ep,
+                         interleave=args.interleave,
+                         zero_stages=zero_stages,
                          remat=args.remat, check_capacity=check_capacity,
                          explain=args.explain)
         plans = grid.plans()
@@ -587,6 +620,8 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             "seq": None if cfg.family == "mlp" else args.seq,
             "pod_size": args.pod_size,
             "max_pp": args.pp,
+            "max_ep": args.ep,
+            "interleave": args.interleave,
             "algo": args.algo,
             "algorithms": list(algos),
             "zero_stages": list(grid.zero_stages),
@@ -606,6 +641,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
           + ("" if cfg.family == "mlp" else f", seq={args.seq}")
           + f", algo={args.algo}"
           + (f", max_pp={args.pp}" if args.pp > 1 else "")
+          + (f", max_ep={args.ep}" if args.ep > 1 else "")
+          + (f", interleave={args.interleave}" if args.interleave > 1
+             else "")
           + (f", zero={args.zero}" if args.zero != "0" else "")
           + (", remat" if args.remat else ""))
     print(format_plan_table(shown))
@@ -625,9 +663,11 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
               f"({100 * best.bubble_fraction:.0f}% bubble)"
               if best.pp > 1 else "")
     zero_note = f", ZeRO-{best.zero_stage}" if best.zero_stage else ""
+    ep_note = (f", ep{best.ep} (dispatch a2a on {best.ep_link})"
+               if best.ep > 1 else "")
     print(f"\nbest: {best.mesh} ({best.algo_label}) -> "
           f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound"
-          f"{zero_note}{bubble}{band}")
+          f"{zero_note}{ep_note}{bubble}{band}")
     if grid.hbm_capacity_bytes > 0:
         cap_gb = grid.hbm_capacity_bytes / 1e9
         note = (f"capacity: best uses {best.hbm_used_gb:.1f} of "

@@ -3,7 +3,7 @@
 ``plan_grid(cfg, hw, chips_list, batch_list, ...)`` evaluates the full
 cartesian candidate space
 
-    (dp × tp × pp) × microbatch × collective-algorithm × batch × chips
+    (dp × tp × pp × ep) × microbatch × collective-algorithm × batch × chips
 
 in NumPy broadcast passes — no per-candidate Python loop anywhere on the
 evaluation path.  Candidate enumeration (divisor lists, feasibility
@@ -18,15 +18,36 @@ batch, ``max_pp=1``), so there is exactly one evaluation core; its
 ``pp = 1`` output is regression-pinned bit-identical to the PR 4
 per-candidate planner (``tests/test_plan_grid.py``).
 
-**Mesh layout.**  Axes nest tp-inner / pp-middle / dp-outer, so a ring
-over the tp axis has stride 1, the pp axis stride tp, and the dp axis
-stride tp·pp.  With ``pod_size`` set, any axis whose extent
-(size · stride) exceeds the pod is priced at the spec's ``pod`` link —
-the slowest hop bounds a ring — expressed here as a boolean mask per
-candidate with the link bandwidth/α gathered elementwise.
+**Mesh layout.**  Axes nest tp-inner / ep-next / pp-middle / dp-outer,
+so a ring over the tp axis has stride 1, the ep axis stride tp, the pp
+axis stride tp·ep, and the dp axis stride tp·ep·pp.  With ``pod_size``
+set, any axis whose extent (size · stride) exceeds the pod is priced at
+the spec's ``pod`` link — the slowest hop bounds a ring — expressed here
+as a boolean mask per candidate with the link bandwidth/α gathered
+elementwise.
+
+**Expert parallelism (ISSUE 9).**  ``max_ep > 1`` admits an ep axis for
+MoE configs: ep must divide the padded expert count
+``E_pad = max(n_experts, pad_experts_to)`` (mirroring the GQA
+head-divisibility gate), the routed expert weights/grads/optimizer
+states shard over ep (``launch/memory`` and the streamed-weights term
+here), and every MoE layer pays a capacity-factor-aware dispatch +
+combine all-to-all on the ep axis's own pod-routed link
+(``collectives.ep_dispatch_combine``, α·steps + bytes/bw like every
+other axis).  Top-k routing imbalance enters as a ``max_load/mean_load``
+derate (:func:`moe_routing_derate`) multiplying both the per-chip expert
+FLOPs and the dispatch wire bytes; dense blocks (attention, router,
+shared experts) are priced as replicated across ep — the conservative
+GShard accounting, where ep buys expert-side compute/memory sharding at
+the price of all-to-all traffic.  Every ep = 1 lane is overlaid with
+``np.where``/additive-zero identities, so the default ``max_ep = 1``
+search stays bit-identical to the PR 4/5/6 goldens.
 
 **Pipeline parallelism (1F1B).**  A pp-way candidate splits the layer
-stack into ``pp`` stages (pp must divide ``n_layers``) and the per-dp
+stack into ``pp`` stages (``pp ≤ n_layers``; when pp ∤ n_layers the
+stack ceil-splits unevenly and the widest ``ceil(L/pp)``-layer stage
+sets the critical path — per-stage work scales by
+``ceil(L/pp)·pp/L ≥ 1``, exactly 1.0 when pp divides L) and the per-dp
 batch into ``m`` microbatches (m must divide ``batch/dp``).  The 1F1B
 schedule keeps ``pp − 1`` microbatch slots of bubble at the ramp, so the
 step time inflates by the bubble factor
@@ -45,7 +66,12 @@ non-pipelined model.  The dp gradient
 all-reduce runs once per step (after the last microbatch) and is not
 bubbled.  Per-microbatch memory re-streams the stage weights
 (weights + boundary activations per traversal), which reduces exactly to
-the PR 4 accounting at pp = m = 1.
+the PR 4 accounting at pp = m = 1.  ``interleave = v > 1`` prices the
+interleaved-1F1B schedule: each chip holds ``v_eff = min(v, L // pp)``
+virtual stage chunks, shrinking the ramp bubble to ``(pp − 1)/v_eff``
+microbatch slots at the cost of ``v_eff×`` the boundary p2p traffic
+(every chunk boundary crosses chips).  ``interleave = 1`` (default) is
+the classic schedule, bit-for-bit.
 
 **Memory feasibility (ISSUE 6).**  Before any pricing pass, every
 candidate's per-chip working set (``launch/memory``: params + grads +
@@ -126,10 +152,13 @@ class MeshPlan:
     fits: bool = True            # hbm_bytes <= hw.hbm_capacity_bytes (or
     #                              the spec carries no capacity: trivially True)
     remat: bool = False          # activations rematerialized (+1/3 FLOPs)
+    ep: int = 1                  # expert-parallel axis (1 = no ep axis)
+    ep_link: str = "ici"         # link the ep dispatch/combine a2a rides
+    vstages: int = 1             # interleaved-1F1B virtual stages per chip
 
     @property
     def chips(self) -> int:
-        return self.dp * self.tp * self.pp
+        return self.dp * self.tp * self.pp * self.ep
 
     @property
     def hbm_used_gb(self) -> float:
@@ -139,12 +168,15 @@ class MeshPlan:
     @property
     def mesh(self) -> str:
         base = f"dp{self.dp}xtp{self.tp}"
-        return base + (f"xpp{self.pp}" if self.pp > 1 else "")
+        return (base + (f"xpp{self.pp}" if self.pp > 1 else "")
+                + (f"xep{self.ep}" if self.ep > 1 else ""))
 
     @property
     def bubble_fraction(self) -> float:
-        """Fraction of the pipelined step spent in the 1F1B ramp bubble."""
-        return (self.pp - 1.0) / (self.microbatches + self.pp - 1.0)
+        """Fraction of the pipelined step spent in the 1F1B ramp bubble
+        (interleaving divides the ramp by the virtual-stage count)."""
+        ramp = (self.pp - 1.0) / self.vstages
+        return ramp / (self.microbatches + ramp)
 
     @property
     def algo_label(self) -> str:
@@ -233,9 +265,30 @@ def feasible_meshes(cfg: ModelConfig, chips: int,
 
 
 def pp_choices(cfg: ModelConfig, chips: int, max_pp: int) -> List[int]:
-    """Pipeline sizes: divide both the chip budget and the layer stack."""
+    """Pipeline sizes: divide the chip budget, fit inside the layer stack.
+
+    Stage counts need not divide ``n_layers`` — the stack ceil-splits,
+    with the widest stage setting the critical path — but a stage count
+    beyond the layer count would leave empty stages, so ``pp ≤ n_layers``.
+    """
     return [p for p in _divisors(chips)
-            if p <= max_pp and cfg.n_layers % p == 0]
+            if p <= max_pp and p <= cfg.n_layers]
+
+
+def _padded_experts(cfg: ModelConfig) -> int:
+    """E_pad = max(n_experts, pad_experts_to); 0 for expert-less configs."""
+    if getattr(cfg, "n_experts", 0) <= 0:
+        return 0
+    return max(cfg.n_experts, cfg.pad_experts_to)
+
+
+def ep_choices(cfg: ModelConfig, chips: int, max_ep: int) -> List[int]:
+    """Expert-parallel sizes: divide the chip budget and the padded expert
+    count ``E_pad`` (padding experts buy divisibility; a shard boundary
+    through an expert tensor would not).  ep = 1 is always feasible."""
+    e_pad = _padded_experts(cfg)
+    return [e for e in _divisors(chips)
+            if e <= max_ep and (e == 1 or (e_pad > 0 and e_pad % e == 0))]
 
 
 def microbatch_choices(batch_per_dp: int, pp: int) -> Tuple[int, ...]:
@@ -287,6 +340,8 @@ class ExplainTerms:
     net_tp_bytes_s: np.ndarray           # tp act syncs: fill·wire/bw
     net_pp_alpha_s: np.ndarray           # pp boundary p2p: fill·α·hops
     net_pp_bytes_s: np.ndarray           # pp boundary p2p: fill·bytes/bw
+    net_ep_alpha_s: np.ndarray           # ep dispatch a2a: fill·α·hops
+    net_ep_bytes_s: np.ndarray           # ep dispatch a2a: fill·wire/bw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -308,6 +363,8 @@ class PlanGrid:
     seq: int
     pod_size: Optional[int]
     max_pp: int
+    max_ep: int
+    interleave: int                      # interleaved-1F1B virtual stage cap
     algorithms: Tuple[str, ...]          # requested, raw (may include "auto")
     zero_stages: Tuple[int, ...]         # searched ZeRO stages
     remat: bool
@@ -319,6 +376,7 @@ class PlanGrid:
     dp: np.ndarray
     tp: np.ndarray
     pp: np.ndarray
+    ep: np.ndarray
     microbatches: np.ndarray
     zero: np.ndarray                     # per-candidate ZeRO stage
     req_idx: np.ndarray                  # index into `algorithms`
@@ -327,6 +385,8 @@ class PlanGrid:
     dp_pod: np.ndarray                   # bool: axis priced at the pod link
     tp_pod: np.ndarray
     pp_pod: np.ndarray
+    ep_pod: np.ndarray
+    vstages: np.ndarray                  # interleaved virtual stages (int)
 
     flops: np.ndarray                    # per chip per step
     mem_bytes: np.ndarray
@@ -408,7 +468,10 @@ class PlanGrid:
             pp=pp, microbatches=int(self.microbatches[i]),
             pp_link=POD_LINK if self.pp_pod[i] else "ici",
             zero_stage=zero, hbm_bytes=float(self.hbm_bytes[i]),
-            fits=bool(self.fits[i]), remat=self.remat)
+            fits=bool(self.fits[i]), remat=self.remat,
+            ep=int(self.ep[i]),
+            ep_link=POD_LINK if self.ep_pod[i] else "ici",
+            vstages=int(self.vstages[i]))
 
     def plans(self, chips: Optional[int] = None,
               batch: Optional[int] = None) -> List[MeshPlan]:
@@ -435,41 +498,54 @@ class PlanGrid:
 
 @functools.lru_cache(maxsize=4096)
 def _point_candidates(width: int, n_heads: int, n_kv_heads: int,
-                      n_layers: int, chips: int, batch: int,
-                      max_pp: int) -> Tuple[np.ndarray, ...]:
-    """(dp, tp, pp, m) arrays for one grid point — pure integer work.
+                      n_layers: int, e_pad: int, chips: int, batch: int,
+                      max_pp: int, max_ep: int) -> Tuple[np.ndarray, ...]:
+    """(dp, tp, pp, ep, m) arrays for one grid point — pure integer work.
 
     Keyed on the integers that actually determine feasibility (model
-    width, head counts, layer count, chip budget, batch, pp cap), so
-    repeated grid points — N ``plan()`` calls over the same configs, or
-    overlapping grids — enumerate once per process.  Callers must treat
-    the returned arrays as immutable (they are shared cache entries).
+    width, head counts, layer count, padded expert count, chip budget,
+    batch, pp/ep caps), so repeated grid points — N ``plan()`` calls over
+    the same configs, or overlapping grids — enumerate once per process.
+    Callers must treat the returned arrays as immutable (they are shared
+    cache entries).  The ep gate mirrors the GQA head gate: ep must
+    divide ``e_pad`` (an ep > 1 axis on an expert-less config is never
+    feasible); ep = 1 is always kept, so ``max_ep = 1`` reproduces the
+    three-axis candidate space exactly.
     """
     dp_l: List[int] = []
     tp_l: List[int] = []
     pp_l: List[int] = []
+    ep_l: List[int] = []
     m_l: List[int] = []
     for pp in _divisors(chips):
-        if pp > max_pp or n_layers % pp:
+        if pp > max_pp or pp > n_layers:
             continue
-        for dp, tp in _factor_pairs(chips // pp):
-            if batch % dp or not _tp_ok(tp, width, n_heads, n_kv_heads):
+        for ep in _divisors(chips // pp):
+            if ep > max_ep:
                 continue
-            for m in microbatch_choices(batch // dp, pp):
-                dp_l.append(dp)
-                tp_l.append(tp)
-                pp_l.append(pp)
-                m_l.append(m)
+            if ep > 1 and (e_pad <= 0 or e_pad % ep):
+                continue
+            for dp, tp in _factor_pairs(chips // pp // ep):
+                if batch % dp or not _tp_ok(tp, width, n_heads, n_kv_heads):
+                    continue
+                for m in microbatch_choices(batch // dp, pp):
+                    dp_l.append(dp)
+                    tp_l.append(tp)
+                    pp_l.append(pp)
+                    ep_l.append(ep)
+                    m_l.append(m)
     return (np.asarray(dp_l, dtype=np.int64),
             np.asarray(tp_l, dtype=np.int64),
             np.asarray(pp_l, dtype=np.int64),
+            np.asarray(ep_l, dtype=np.int64),
             np.asarray(m_l, dtype=np.int64))
 
 
 @functools.lru_cache(maxsize=4096)
 def _point_prune_stats(width: int, n_heads: int, n_kv_heads: int,
-                       n_layers: int, chips: int, batch: int,
-                       max_pp: int) -> Tuple[Tuple[str, int], ...]:
+                       n_layers: int, e_pad: int, chips: int, batch: int,
+                       max_pp: int, max_ep: int
+                       ) -> Tuple[Tuple[str, int], ...]:
     """Why raw tuples fell out of one grid point's enumeration, by gate.
 
     The shadow of :func:`_point_candidates`: walks the same divisor space
@@ -477,16 +553,18 @@ def _point_prune_stats(width: int, n_heads: int, n_kv_heads: int,
     survivors — the structured half of ``--explain``'s prune account (the
     capacity cut is the other half; it happens downstream on enumerated
     candidates and is reported from ``PlanGrid.n_pruned``).  Units: the
-    two pp gates count (dp, tp, pp) mesh tuples under the rejected pp;
-    the dp/tp gates count (dp, tp, pp) tuples; ``microbatch_lt_pp``
-    counts (dp, tp, pp, m) tuples whose 1F1B pipeline would never fill
-    (m < pp); ``kept_mesh_tuples`` counts the (dp, tp, pp, m) tuples
-    that reached pricing — before the zero/algorithm axes are tiled on.
-    Cached alongside the candidate cache; kept separate so the hot
-    enumeration path never pays for bookkeeping it only needs under
+    two pp gates count (dp, tp) pairs under the rejected pp (at ep = 1);
+    the two ep gates count (dp, tp) pairs under the rejected (pp, ep);
+    the dp/tp gates count (dp, tp, pp, ep) tuples; ``microbatch_lt_pp``
+    counts (dp, tp, pp, ep, m) tuples whose 1F1B pipeline would never
+    fill (m < pp); ``kept_mesh_tuples`` counts the (dp, tp, pp, ep, m)
+    tuples that reached pricing — before the zero/algorithm axes are
+    tiled on.  Cached alongside the candidate cache; kept separate so the
+    hot enumeration path never pays for bookkeeping it only needs under
     ``explain=True``.
     """
-    stats = {"pp_exceeds_max_pp": 0, "pp_layer_indivisible": 0,
+    stats = {"pp_exceeds_max_pp": 0, "pp_exceeds_layers": 0,
+             "ep_exceeds_max_ep": 0, "ep_expert_indivisible": 0,
              "batch_dp_indivisible": 0, "tp_shard_infeasible": 0,
              "microbatch_lt_pp": 0, "kept_mesh_tuples": 0}
     for pp in _divisors(chips):
@@ -494,30 +572,40 @@ def _point_prune_stats(width: int, n_heads: int, n_kv_heads: int,
         if pp > max_pp:
             stats["pp_exceeds_max_pp"] += n_pairs
             continue
-        if n_layers % pp:
-            stats["pp_layer_indivisible"] += n_pairs
+        if pp > n_layers:
+            stats["pp_exceeds_layers"] += n_pairs
             continue
-        for dp, tp in _factor_pairs(chips // pp):
-            if batch % dp:
-                stats["batch_dp_indivisible"] += 1
+        for ep in _divisors(chips // pp):
+            n_sub = len(_divisors(chips // pp // ep))
+            if ep > max_ep:
+                stats["ep_exceeds_max_ep"] += n_sub
                 continue
-            if not _tp_ok(tp, width, n_heads, n_kv_heads):
-                stats["tp_shard_infeasible"] += 1
+            if ep > 1 and (e_pad <= 0 or e_pad % ep):
+                stats["ep_expert_indivisible"] += n_sub
                 continue
-            if pp > 1:
-                divs = _divisors(batch // dp)
-                stats["microbatch_lt_pp"] += sum(1 for m in divs if m < pp)
-                stats["kept_mesh_tuples"] += sum(1 for m in divs if m >= pp)
-            else:
-                stats["kept_mesh_tuples"] += 1
+            for dp, tp in _factor_pairs(chips // pp // ep):
+                if batch % dp:
+                    stats["batch_dp_indivisible"] += 1
+                    continue
+                if not _tp_ok(tp, width, n_heads, n_kv_heads):
+                    stats["tp_shard_infeasible"] += 1
+                    continue
+                if pp > 1:
+                    divs = _divisors(batch // dp)
+                    stats["microbatch_lt_pp"] += sum(1 for m in divs
+                                                     if m < pp)
+                    stats["kept_mesh_tuples"] += sum(1 for m in divs
+                                                     if m >= pp)
+                else:
+                    stats["kept_mesh_tuples"] += 1
     return tuple(sorted(stats.items()))
 
 
 def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
                           batch_list: Sequence[int], max_pp: int,
                           algo_codes: Sequence[int],
-                          zero_stages: Sequence[int] = (0,)
-                          ) -> Dict[str, np.ndarray]:
+                          zero_stages: Sequence[int] = (0,),
+                          max_ep: int = 1) -> Dict[str, np.ndarray]:
     """Flat candidate index arrays over the whole grid.
 
     Per-point enumeration is cached integer bookkeeping
@@ -530,18 +618,19 @@ def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
     grid point has no feasible mesh, naming the point.
     """
     width = _model_width(cfg)
+    e_pad = _padded_experts(cfg)
     n_req = len(algo_codes)
     req_range = np.arange(n_req, dtype=np.intp)
     zs = np.asarray(zero_stages, dtype=np.int64)
-    cols: List[List[np.ndarray]] = [[] for _ in range(8)]
+    cols: List[List[np.ndarray]] = [[] for _ in range(9)]
     for ci, chips in enumerate(chips_list):
         for bi, batch in enumerate(batch_list):
-            dp_a, tp_a, pp_a, m_a = _point_candidates(
-                width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,
-                int(chips), int(batch), max_pp)
+            dp_a, tp_a, pp_a, ep_a, m_a = _point_candidates(
+                width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers, e_pad,
+                int(chips), int(batch), max_pp, max_ep)
             if dp_a.size == 0:
                 raise ValueError(
-                    f"no feasible (dp, tp, pp) for chips={chips}, "
+                    f"no feasible (dp, tp, pp, ep) for chips={chips}, "
                     f"batch={batch}, width={width}"
                     + (f" (tp must divide n_heads={cfg.n_heads}"
                        + (f", n_kv_heads={cfg.n_kv_heads}"
@@ -555,6 +644,7 @@ def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
             dp_z = dp_z[keep]
             tp_z = np.repeat(tp_a, zs.size)[keep]
             pp_z = np.repeat(pp_a, zs.size)[keep]
+            ep_z = np.repeat(ep_a, zs.size)[keep]
             m_z = np.repeat(m_a, zs.size)[keep]
             z_col = z_col[keep]
             n = dp_z.size * n_req
@@ -564,26 +654,28 @@ def _enumerate_candidates(cfg: ModelConfig, chips_list: Sequence[int],
             cols[2].append(np.repeat(dp_z, n_req))
             cols[3].append(np.repeat(tp_z, n_req))
             cols[4].append(np.repeat(pp_z, n_req))
-            cols[5].append(np.repeat(m_z, n_req))
-            cols[6].append(np.repeat(z_col, n_req))
-            cols[7].append(np.tile(req_range, dp_z.size))
-    names = ("chips_idx", "batch_idx", "dp", "tp", "pp", "microbatches",
-             "zero", "req_idx")
+            cols[5].append(np.repeat(ep_z, n_req))
+            cols[6].append(np.repeat(m_z, n_req))
+            cols[7].append(np.repeat(z_col, n_req))
+            cols[8].append(np.tile(req_range, dp_z.size))
+    names = ("chips_idx", "batch_idx", "dp", "tp", "pp", "ep",
+             "microbatches", "zero", "req_idx")
     return {name: np.concatenate(parts)
             for name, parts in zip(names, cols)}
 
 
 def _capacity_error(cfg: ModelConfig, capacity: float, chips: int,
                     batch: int, seq: int, max_pp: int, remat: bool,
-                    zero_stages: Sequence[int]) -> ValueError:
+                    zero_stages: Sequence[int],
+                    max_ep: int = 1) -> ValueError:
     """Actionable error for a grid point the capacity cut emptied."""
     width = _model_width(cfg)
-    dp_a, tp_a, pp_a, m_a = _point_candidates(
+    dp_a, tp_a, pp_a, ep_a, m_a = _point_candidates(
         width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,
-        int(chips), int(batch), max_pp)
+        _padded_experts(cfg), int(chips), int(batch), max_pp, max_ep)
     need = memory_mod.min_zero_stage(
         cfg, capacity, batch=batch, seq=seq, dp=dp_a, tp=tp_a, pp=pp_a,
-        microbatches=m_a, remat=remat)
+        ep=ep_a, microbatches=m_a, remat=remat)
     k = int(need.min()) if need.size else 4
     if k <= 3:
         hint = (f"infeasible without ZeRO-{k}: pass zero_stages "
@@ -598,45 +690,90 @@ def _capacity_error(cfg: ModelConfig, capacity: float, chips: int,
         + hint)
 
 
-@shape_contract("dp:(*g), tp:(*g), pp:(*g) -> (*g), (*g), (*g)")
+@shape_contract("dp:(*g), tp:(*g), pp:(*g), ep:(*g) "
+                "-> (*g), (*g), (*g), (*g)")
 def _pod_masks(dp: np.ndarray, tp: np.ndarray, pp: np.ndarray,
-               pod_size: Optional[int]
-               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+               ep: np.ndarray, pod_size: Optional[int]
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Which mesh axes spill past the pod boundary onto the pod link.
 
-    Extents along the chip grid: tp rides stride 1, pp stride tp, dp
-    stride tp·pp — an axis routes over the pod link when its outermost
-    chip index exceeds ``pod_size``.  Returns ``(dp_pod, tp_pod, pp_pod)``
-    boolean masks of the broadcast candidate shape; ``pod_size=None``
-    (single-pod machine) keeps every axis on the primary link.
+    Extents along the chip grid: tp rides stride 1, ep stride tp, pp
+    stride tp·ep, dp stride tp·ep·pp — an axis routes over the pod link
+    when its outermost chip index exceeds ``pod_size``.  Returns
+    ``(dp_pod, tp_pod, pp_pod, ep_pod)`` boolean masks of the broadcast
+    candidate shape; ``pod_size=None`` (single-pod machine) keeps every
+    axis on the primary link.  At ep = 1 every mask reduces exactly to
+    the pre-ep three-axis layout.
     """
     if pod_size is None:
         z = np.zeros(np.broadcast_shapes(np.shape(dp), np.shape(tp),
-                                         np.shape(pp)), dtype=bool)
-        return z, z, z
-    dp_pod = (dp > 1) & (dp * tp * pp > pod_size)
-    pp_pod = (pp > 1) & (pp * tp > pod_size)
+                                         np.shape(pp), np.shape(ep)),
+                     dtype=bool)
+        return z, z, z, z
+    dp_pod = (dp > 1) & (dp * tp * pp * ep > pod_size)
+    pp_pod = (pp > 1) & (pp * ep * tp > pod_size)
+    ep_pod = (ep > 1) & (ep * tp > pod_size)
     tp_pod = (tp > 1) & (tp > pod_size)
-    return dp_pod, tp_pod, pp_pod
+    return dp_pod, tp_pod, pp_pod, ep_pod
+
+
+@shape_contract("ep:(*g), tokens_mb:(*g) -> (*g)")
+def moe_routing_derate(ep: np.ndarray, tokens_mb: np.ndarray, *,
+                       n_experts: int, pad_experts: int, top_k: int,
+                       capacity_factor: float) -> np.ndarray:
+    """Top-k routing-imbalance derate: expected max_load/mean_load per chip.
+
+    Two multiplicative terms, both dimensionless and ≥ 1:
+
+    * **padding skew** — experts shard ``E_pad / ep`` per chip but only
+      ``E`` of them ever receive routing mass, so the most-loaded chip
+      hosts up to ``min(E_pad/ep, E)`` live experts against a mean of
+      ``E/ep``: derate ``min(E_pad/ep, E) · ep / E`` (exactly 1.0 when
+      ``E_pad == E``).
+    * **stochastic skew** — balanced routing still leaves balls-in-bins
+      variance across ep chips; with ``λ = tokens_mb·k/ep`` expected
+      choices per chip, ``max/mean ≈ 1 + sqrt(2·ln(ep)·(1 − 1/ep)/λ)``
+      (Gaussian maximum of ep near-independent Poisson loads), capped by
+      ``max(capacity_factor, 1.0)`` — the dispatch buffers physically
+      drop anything beyond capacity.
+
+    Every ep = 1 lane returns exactly 1.0 (``np.where`` overlay), so the
+    derate is bit-invisible to non-ep candidates.
+    """
+    e = float(max(n_experts, 1))
+    e_pad = float(max(n_experts, pad_experts, 1))
+    k = float(max(top_k, 1))
+    pad_derate = np.minimum(e_pad / ep, e) * ep / e
+    lam = np.maximum(tokens_mb * k / ep, 1.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        stoch = 1.0 + np.sqrt(2.0 * np.log(ep) * (1.0 - 1.0 / ep) / lam)
+    stoch = np.minimum(stoch, max(float(capacity_factor), 1.0))
+    return np.where(ep > 1.0, pad_derate * stoch, 1.0)
 
 
 def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
               chips_list: Sequence[int], batch_list: Sequence[int], *,
               seq: int = 1, algorithms: Sequence[str] = ("auto",),
               pod_size: Optional[int] = None, max_pp: int = 1,
+              max_ep: int = 1, interleave: int = 1,
               zero_stages: Sequence[int] = (0,), remat: bool = False,
               check_capacity: bool = True,
               explain: bool = False) -> PlanGrid:
-    """Evaluate every (dp × tp × pp) × m × zero × algorithm × batch ×
-    chips candidate in one broadcast pass.
+    """Evaluate every (dp × tp × pp × ep) × m × zero × algorithm × batch
+    × chips candidate in one broadcast pass.
 
     ``algorithms`` entries are concrete collective tags (including the
     ``bidir`` alias) or ``"auto"`` (per-axis α–β argmin over the full
     menu); each entry is its own candidate row, exactly like the scalar
     planner.  ``max_pp = 1`` (the default) reproduces the PR 4 candidate
     space bit-for-bit; larger values add every pipeline size that divides
-    both the chip budget and ``cfg.n_layers``, crossed with every 1F1B
-    microbatch count dividing the per-dp batch.
+    the chip budget and fits the layer stack (``pp ≤ n_layers``; an
+    uneven ceil-split prices pp ∤ n_layers), crossed with every 1F1B
+    microbatch count dividing the per-dp batch.  ``max_ep > 1`` admits
+    expert-parallel sizes dividing both the chip budget and the padded
+    expert count; ``interleave = v > 1`` prices the interleaved-1F1B
+    schedule (ramp bubble ÷ ``min(v, L // pp)`` virtual stages at v×
+    boundary p2p traffic).
 
     ``zero_stages`` adds ZeRO sharding stages as a candidate axis (the
     default ``(0,)`` searches none); ``remat=True`` rematerializes
@@ -667,7 +804,8 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
                     max_pp=max_pp, explain=explain) as sp:
         grid = _plan_grid_impl(
             cfg, hw, chips_list, batch_list, seq=seq, algorithms=algorithms,
-            pod_size=pod_size, max_pp=max_pp, zero_stages=zero_stages,
+            pod_size=pod_size, max_pp=max_pp, max_ep=max_ep,
+            interleave=interleave, zero_stages=zero_stages,
             remat=remat, check_capacity=check_capacity, explain=explain)
         if trace.enabled():
             sp.set(n_enumerated=grid.n_enumerated,
@@ -681,15 +819,20 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
 def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
                     chips_list: Sequence[int], batch_list: Sequence[int], *,
                     seq: int, algorithms: Sequence[str],
-                    pod_size: Optional[int], max_pp: int,
-                    zero_stages: Sequence[int], remat: bool,
-                    check_capacity: bool, explain: bool) -> PlanGrid:
+                    pod_size: Optional[int], max_pp: int, max_ep: int,
+                    interleave: int, zero_stages: Sequence[int],
+                    remat: bool, check_capacity: bool,
+                    explain: bool) -> PlanGrid:
     if isinstance(hw, str):
         hw = get_hardware(hw)
     if not chips_list or not batch_list:
         raise ValueError("chips_list and batch_list must be non-empty")
     if not algorithms:
         raise ValueError("need at least one algorithm (or 'auto')")
+    if max_ep < 1:
+        raise ValueError(f"max_ep must be >= 1, got {max_ep}")
+    if interleave < 1:
+        raise ValueError(f"interleave must be >= 1, got {interleave}")
     if not zero_stages:
         raise ValueError("need at least one ZeRO stage (0 = unsharded)")
     bad = [z for z in zero_stages if z not in ZERO_STAGES]
@@ -704,7 +847,8 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     with trace.span("plan_grid.enumerate") as sp:
         cand = _enumerate_candidates(cfg, chips_list, batch_list, max_pp,
                                      algo_codes, tuple(int(z) for z in
-                                                       zero_stages))
+                                                       zero_stages),
+                                     max_ep=max_ep)
         n_enumerated = int(cand["dp"].size)
         sp.set(n_enumerated=n_enumerated)
     point_shape = (len(chips_list), len(batch_list))
@@ -716,7 +860,7 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         batch_arr = np.asarray(batch_list, dtype=np.float64)
         hbm = memory_mod.training_working_set(
             cfg, batch=batch_arr[cand["batch_idx"]], seq=seq,
-            dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
+            dp=cand["dp"], tp=cand["tp"], pp=cand["pp"], ep=cand["ep"],
             microbatches=cand["microbatches"], zero_stage=cand["zero"],
             remat=remat).total
         fits = hbm <= capacity if capacity > 0 else \
@@ -731,7 +875,7 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
                 ci, bi = np.argwhere(survivors == 0)[0]
                 raise _capacity_error(cfg, capacity, chips_list[ci],
                                       batch_list[bi], seq, max_pp, remat,
-                                      zero_stages)
+                                      zero_stages, max_ep=max_ep)
             cand = {k: v[fits] for k, v in cand.items()}
             hbm = hbm[fits]
             fits = np.ones(hbm.shape, dtype=bool)
@@ -747,6 +891,7 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     dp = cand["dp"].astype(np.float64)
     tp = cand["tp"].astype(np.float64)
     pp = cand["pp"].astype(np.float64)
+    ep = cand["ep"].astype(np.float64)
     m = cand["microbatches"].astype(np.float64)
     zero = cand["zero"]
     code = np.asarray(algo_codes, dtype=np.int64)[cand["req_idx"]]
@@ -760,19 +905,52 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     params_bytes = n_total * 4.0                    # fp32 master weights
 
     # --- per-candidate work terms (step- and microbatch-level) ---------------
-    flops_step = 6.0 * n_active * tokens / (dp * tp * pp)
+    # ceil: when pp ∤ n_layers the widest stage sets the pipeline critical
+    # path, inflating per-stage work by ceil(L/pp)·pp/L (exactly 1.0, and
+    # bit-identical, when pp divides L)
+    stage_layers = np.ceil(float(cfg.n_layers) / pp)
+    uneven = stage_layers * pp / float(cfg.n_layers)
+    flops_step = 6.0 * n_active * tokens / (dp * tp * pp) * uneven
     if remat:   # backward recomputes the forward: 6·N·tokens → 8·N·tokens
         flops_step = flops_step * memory_mod.REMAT_FLOPS_FACTOR
+    # ep shards the routed experts: each chip holds E_pad/ep experts and
+    # computes only its shard's routed FLOPs, derated by routing imbalance
+    # (expert FLOPs are exp_share of active; the dense remainder — attention,
+    # router, shared experts — replicates over ep).  The overlay leaves
+    # every ep = 1 lane bit-untouched.
+    ep_mask = ep > 1.0
+    e_total = 0.0
+    derate = 1.0
+    if ep_mask.any():
+        from repro.launch.specs import expert_param_counts
+        e_total, e_active = expert_param_counts(cfg)
+        tokens_mb = tokens / (dp * m)
+        derate = moe_routing_derate(
+            ep, tokens_mb, n_experts=cfg.n_experts,
+            pad_experts=cfg.pad_experts_to, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor)
+        exp_flops = 6.0 * e_active * tokens / (dp * tp * pp) * uneven
+        if remat:
+            exp_flops = exp_flops * memory_mod.REMAT_FLOPS_FACTOR
+        flops_step = np.where(
+            ep_mask, flops_step + exp_flops * (derate / ep - 1.0),
+            flops_step)
     flops_mb = flops_step / m
     act_bytes = (tokens / dp) * width * act_dtype   # one boundary activation
     act_mb = act_bytes / m
-    stage_layers = float(cfg.n_layers) / pp
-    mem_mb = params_bytes / (tp * pp) + 2.0 * stage_layers * act_mb
+    # ep also shards the streamed expert weights (fp32 master copies)
+    params_stream = params_bytes
+    if ep_mask.any() and e_total > 0.0:
+        params_stream = np.where(
+            ep_mask, params_bytes - e_total * 4.0 + e_total * 4.0 / ep,
+            params_bytes)
+    mem_mb = params_stream / (tp * pp) + 2.0 * stage_layers * act_mb
 
     # --- per-axis link routing as boolean masks ------------------------------
-    dp_pod, tp_pod, pp_pod = _pod_masks(dp, tp, pp, pod_size)
+    dp_pod, tp_pod, pp_pod, ep_pod = _pod_masks(dp, tp, pp, ep, pod_size)
     if pod_size is not None and \
-            bool(dp_pod.any() | pp_pod.any() | tp_pod.any()):
+            bool(dp_pod.any() | pp_pod.any() | tp_pod.any()
+                 | ep_pod.any()):
         hw.bandwidth_for(POD_LINK)  # actionable KeyError if spec has none
     bw_pri, a_pri = hw.bandwidth_for(None), hw.alpha_for(None)
     if pod_size is not None and POD_LINK in hw.extra_links:
@@ -785,13 +963,16 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     tp_alpha = np.where(tp_pod, a_pod, a_pri)
     pp_bw = np.where(pp_pod, bw_pod, bw_pri)
     pp_alpha = np.where(pp_pod, a_pod, a_pri)
+    ep_bw = np.where(ep_pod, bw_pod, bw_pri)
+    ep_alpha = np.where(ep_pod, a_pod, a_pri)
 
     # --- collective algorithm selection, per axis, whole grid at once --------
     # "auto" rows see the full menu; fixed rows see exactly their algorithm
     allowed = (code[None, :] < 0) | \
         (np.arange(len(menu))[:, None] == code[None, :])
     dp_wire, dp_steps, dp_sel = collectives.best_all_reduce_grid(
-        params_bytes / (tp * pp), dp, dp_bw, dp_alpha, menu, allowed=allowed)
+        params_stream / (tp * pp), dp, dp_bw, dp_alpha, menu,
+        allowed=allowed)
     tp_wire, tp_steps, tp_sel = collectives.best_all_reduce_grid(
         act_mb, tp, tp_bw, tp_alpha, menu, allowed=allowed)
     # ZeRO rows pin the dp sync to the structural RS+AG schedule — the
@@ -799,7 +980,8 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     # the guard skips the pass entirely on the default (0,) search
     zmask = zero >= 1
     if zmask.any():
-        zcost = collectives.zero_dp_sync(params_bytes / (tp * pp), dp, zero)
+        zcost = collectives.zero_dp_sync(params_stream / (tp * pp), dp,
+                                         zero)
         dp_wire = np.where(zmask, zcost.wire_bytes, dp_wire)
         dp_steps = np.where(zmask, zcost.steps, dp_steps)
     dp_time = dp_alpha * dp_steps + dp_wire / dp_bw
@@ -808,10 +990,36 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     tp_steps_mb = tp_scale * tp_steps
     tp_time = tp_alpha * tp_steps_mb + tp_wire_mb / tp_bw
 
-    # pp boundary p2p: 2 hops (act fwd + grad bwd) per microbatch
+    # pp boundary p2p: 2 hops (act fwd + grad bwd) per microbatch; the
+    # interleaved schedule multiplies boundary traffic by its virtual
+    # stage count (every chunk boundary crosses chips)
     pp_bytes_mb = collectives.pp_boundary_bytes(act_mb, pp)
     pp_steps_mb = 2.0 * np.where(pp > 1.0, 1.0, 0.0)
+    if interleave > 1:
+        vstages = np.where(
+            pp > 1.0,
+            np.maximum(1.0, np.minimum(float(interleave),
+                                       np.floor(float(cfg.n_layers) / pp))),
+            1.0)
+        pp_bytes_mb = pp_bytes_mb * vstages
+        pp_steps_mb = pp_steps_mb * vstages
+    else:
+        vstages = np.ones_like(pp)
     pp_time = pp_alpha * pp_steps_mb + pp_bytes_mb / pp_bw
+
+    # ep dispatch + combine: one capacity-factor-sized all-to-all pair per
+    # MoE layer on the ep axis's own link, wire bytes derated by routing
+    # imbalance.  Scalar zeros on an ep-less grid keep every downstream
+    # sum bit-identical (x + 0.0 is bitwise identity for finite x ≥ 0).
+    if bool(np.any(ep_mask)):
+        payload_mb = act_mb * float(cfg.moe_top_k) * float(
+            cfg.capacity_factor)
+        ecost = collectives.ep_dispatch_combine(payload_mb, ep)
+        ep_wire_mb = stage_layers * ecost.wire_bytes * derate
+        ep_steps_mb = stage_layers * ecost.steps
+        ep_time = ep_alpha * ep_steps_mb + ep_wire_mb / ep_bw
+    else:
+        ep_wire_mb = ep_steps_mb = ep_time = 0.0
     _sp_price.set(n_candidates=int(dp.size))
     _sp_price.__exit__(None, None, None)
 
@@ -823,10 +1031,16 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     # one vectorized sweep prices and classifies everything.  At
     # pp = m = 1 the fill is exactly 1.0 and every number is bit-for-bit
     # the PR 4 non-pipelined model.
-    fill = m + pp - 1.0
+    # interleaving shrinks the ramp to (pp − 1)/vstages microbatch slots;
+    # the default interleave = 1 branch keeps the classic expression (and
+    # its bit-exact association) untouched
+    if interleave > 1:
+        fill = m + (pp - 1.0) / vstages
+    else:
+        fill = m + pp - 1.0
     # dp grad sync runs once per step (after the last backward), unfilled;
     # per-axis α–β times fold into primary-link-equivalent bytes
-    t_net_step = fill * (tp_time + pp_time) + dp_time
+    t_net_step = fill * (tp_time + pp_time + ep_time) + dp_time
     eff_net_bytes = t_net_step * hw.net_bw
     with trace.span("plan_grid.sweep_classify", n_candidates=int(dp.size)):
         res = sweep_mod.sweep(
@@ -850,11 +1064,17 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
             net_tp_alpha_s=fill * tp_alpha * tp_steps_mb,
             net_tp_bytes_s=fill * tp_wire_mb / tp_bw,
             net_pp_alpha_s=fill * pp_alpha * pp_steps_mb,
-            net_pp_bytes_s=fill * pp_bytes_mb / pp_bw)
+            net_pp_bytes_s=fill * pp_bytes_mb / pp_bw,
+            net_ep_alpha_s=(np.zeros_like(dp_time)
+                            if np.isscalar(ep_steps_mb)
+                            else fill * ep_alpha * ep_steps_mb),
+            net_ep_bytes_s=(np.zeros_like(dp_time)
+                            if np.isscalar(ep_wire_mb)
+                            else fill * ep_wire_mb / ep_bw))
         prune_reasons = {
             (ci, bi): dict(_point_prune_stats(
                 width, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers,
-                int(c), int(b), max_pp))
+                _padded_experts(cfg), int(c), int(b), max_pp, max_ep))
             for ci, c in enumerate(chips_list)
             for bi, b in enumerate(batch_list)}
 
@@ -865,19 +1085,23 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         cfg_name=cfg.name, hardware=hw.name,
         chips_list=tuple(int(c) for c in chips_list),
         batch_list=tuple(int(b) for b in batch_list),
-        seq=seq, pod_size=pod_size, max_pp=max_pp,
+        seq=seq, pod_size=pod_size, max_pp=max_pp, max_ep=max_ep,
+        interleave=interleave,
         algorithms=tuple(algorithms),
         zero_stages=tuple(int(z) for z in zero_stages), remat=remat,
         hbm_capacity_bytes=capacity, check_capacity=check_capacity,
         chips_idx=cand["chips_idx"], batch_idx=cand["batch_idx"],
-        dp=cand["dp"], tp=cand["tp"], pp=cand["pp"],
+        dp=cand["dp"], tp=cand["tp"], pp=cand["pp"], ep=cand["ep"],
         microbatches=cand["microbatches"], zero=cand["zero"],
         req_idx=cand["req_idx"],
         dp_algo_idx=dp_sel, tp_algo_idx=tp_sel,
-        dp_pod=dp_pod, tp_pod=tp_pod, pp_pod=pp_pod,
+        dp_pod=dp_pod, tp_pod=tp_pod, pp_pod=pp_pod, ep_pod=ep_pod,
+        vstages=vstages.astype(np.int64),
         flops=flops_step, mem_bytes=m * mem_mb,
-        net_bytes=dp_wire + m * tp_wire_mb + m * pp_bytes_mb,
-        net_steps=dp_steps + m * tp_steps_mb + m * pp_steps_mb,
+        net_bytes=dp_wire + m * tp_wire_mb + m * pp_bytes_mb
+        + m * ep_wire_mb,
+        net_steps=dp_steps + m * tp_steps_mb + m * pp_steps_mb
+        + m * ep_steps_mb,
         t_compute=res.t_compute, t_memory=res.t_memory,
         t_network=res.t_network, runtime=res.runtime,
         bottleneck=res.bottleneck,

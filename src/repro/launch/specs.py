@@ -221,9 +221,45 @@ def param_counts(cfg: ModelConfig) -> Tuple[float, float]:
             continue
         if any(k in keys for k in ("w_gate", "w_up", "w_down")) and \
                 "moe" in keys and "shared" not in keys:
-            active += n * cfg.moe_top_k / max(cfg.n_experts, 1)
+            # the tensors hold E_pad = max(n_experts, pad_experts_to)
+            # experts (init_moe pads for EP divisibility), so the active
+            # fraction is top_k over the padded count actually allocated —
+            # dividing by the true n_experts would inflate active FLOPs by
+            # E_pad/E (padding experts never receive routing mass)
+            active += n * cfg.moe_top_k / max(cfg.n_experts,
+                                              cfg.pad_experts_to, 1)
             continue
         active += n
+    return total, active
+
+
+@functools.lru_cache(maxsize=None)
+def expert_param_counts(cfg: ModelConfig) -> Tuple[float, float]:
+    """(total, active) parameters of the *routed* expert tensors only.
+
+    The slice of :func:`param_counts` that an expert-parallel axis shards:
+    routed ``w_gate``/``w_up``/``w_down`` stacks at their padded
+    ``E_pad = max(n_experts, pad_experts_to)`` allocation, excluding the
+    router and shared experts (those replicate over ep).  Non-MoE configs
+    return ``(0.0, 0.0)``.  Same memoization contract as
+    :func:`param_counts`.
+    """
+    if cfg.n_experts <= 0:
+        return 0.0, 0.0
+    params = abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    total = 0.0
+    for path, leaf in flat:
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        keys = "/".join(str(getattr(p, 'key', getattr(p, 'idx', p)))
+                        for p in path)
+        if any(k in keys for k in ("w_gate", "w_up", "w_down")) and \
+                "moe" in keys and "shared" not in keys:
+            total += n
+    active = total * cfg.moe_top_k / max(cfg.n_experts,
+                                         cfg.pad_experts_to, 1)
     return total, active
 
 

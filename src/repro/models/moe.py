@@ -65,12 +65,6 @@ def moe_specs(cfg: ModelConfig) -> Specs:
     return p
 
 
-#: tokens per dispatch group (GShard §3.2): capacity buffers are sized per
-#: group, keeping the dispatch tensor O(T * E * C_g) — linear in total tokens
-#: — instead of the quadratic O(T^2 k/E) a single global capacity would give.
-GROUP_TOKENS = 2048
-
-
 def _capacity(group_tokens: int, cfg: ModelConfig) -> int:
     cap = int(group_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
     return max(cap, cfg.moe_top_k)
@@ -82,10 +76,15 @@ def route(router_logits: jnp.ndarray, cfg: ModelConfig
     probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
     gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
     gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
-    # Switch-style load-balance loss: E * sum_e f_e * p_e
-    E = cfg.n_experts
+    # Switch-style load-balance loss: E * sum_e f_e * p_e, with the
+    # assignment fraction f_e counting ALL k routed choices (normalized by
+    # k so f sums to 1) — the top-1 Switch convention undercounts load for
+    # the k=4/8 Qwen routers, leaving k-1 of every token's assignments
+    # invisible to the loss
+    E, k = cfg.n_experts, cfg.moe_top_k
     me = jnp.mean(probs, axis=0)                               # (E,)
-    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1),
+                  axis=0) / k                                  # (E,)
     aux = E * jnp.sum(me * ce)
     return gates, idx, aux
 
@@ -94,8 +93,10 @@ def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, D) -> (out, aux_loss).
 
-    Tokens are flattened and re-grouped into fixed ``GROUP_TOKENS`` windows
-    (GShard groups); each group dispatches into per-expert capacity buffers
+    Tokens are flattened and re-grouped into fixed ``cfg.moe_group_tokens``
+    windows (GShard §3.2 groups: capacity buffers are sized per group,
+    keeping the dispatch tensor linear in total tokens); each group
+    dispatches into per-expert capacity buffers
     via one-hot einsum.  Capacity-dropped tokens pass through the residual
     (their expert contribution is zero) — the standard GShard behaviour.
     The group axis carries the ``batch`` logical sharding (DP), the expert
@@ -123,7 +124,7 @@ def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig
     # computed per group via masked cumulative sum over the flattened choices
     onehot = jax.nn.one_hot(idx, E_pad, dtype=jnp.float32)     # (G, Tg, k, E_pad)
     flat = onehot.reshape(G, Tg * k, E_pad)
-    pos_in_expert = jnp.cumsum(flat, axis=1) - flat            # (G, Tg*k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat            # (G, Tg*k, E_pad)
     pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, Tg, k)
     keep = (pos < C).astype(jnp.float32)
     gates = gates * keep

@@ -8,8 +8,11 @@ explain=True)`` result into an explanation:
     memory α + byte time, and the network side split per mesh axis into
     its α·steps (latency) and bytes/bw (bandwidth) parts, with the dp
     terms relabeled ``zero_sync`` when ZeRO's structural reduce-scatter +
-    all-gather replaces the plain gradient all-reduce — plus the 1F1B
-    pipeline-bubble share of the step;
+    all-gather replaces the plain gradient all-reduce, and an
+    ``ep_dispatch`` entry for the expert-parallel dispatch + combine
+    all-to-all (zero on every ep = 1 candidate) — plus the 1F1B
+    pipeline-bubble share of the step (interleaving shrinks the ramp by
+    the candidate's virtual-stage count);
   * per candidate, a ``breakdown`` dict whose values **sum to the priced
     t_step** (property-tested): the additive parts of whichever resource
     bound the candidate.  The bubble is *not* one of those addends — it
@@ -36,7 +39,7 @@ if TYPE_CHECKING:
 __all__ = ["EXPLAIN_SCHEMA", "explain_candidates", "explain_point",
            "explain_dict", "format_explain_table"]
 
-EXPLAIN_SCHEMA = "repro.explain/v1"
+EXPLAIN_SCHEMA = "repro.explain/v2"
 
 
 def _require_terms(grid: "PlanGrid") -> None:
@@ -71,10 +74,14 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
     out = []
     for i in _ranked_indices(grid, chips, batch):
         dp, tp, pp = int(grid.dp[i]), int(grid.tp[i]), int(grid.pp[i])
+        ep, vs = int(grid.ep[i]), int(grid.vstages[i])
         m, zero = int(grid.microbatches[i]), int(grid.zero[i])
         bound = str(labels[i])
         runtime = float(grid.runtime[i])
-        fill = m + pp - 1
+        # interleaving divides the ramp by vstages; the vs = 1 branch keeps
+        # the classic integer expression (and its exact JSON rendering)
+        ramp = (pp - 1) / vs if vs > 1 else pp - 1
+        fill = m + ramp
         dp_kind = "zero_sync" if zero >= 1 else "all_reduce"
         dp_algo = ("-" if dp <= 1 else
                    ("rs+ag" if zero >= 1 else algs[int(grid.dp_algo_idx[i])]))
@@ -95,8 +102,13 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
                    "alpha_steps": float(t.net_pp_alpha_s[i]),
                    "bytes_over_bw": float(t.net_pp_bytes_s[i]),
                    "total": float(t.net_pp_alpha_s[i] + t.net_pp_bytes_s[i])},
+            "ep": {"kind": "ep_dispatch", "algo": "-" if ep <= 1 else "a2a",
+                   "link": "pod" if grid.ep_pod[i] else "ici",
+                   "alpha_steps": float(t.net_ep_alpha_s[i]),
+                   "bytes_over_bw": float(t.net_ep_bytes_s[i]),
+                   "total": float(t.net_ep_alpha_s[i] + t.net_ep_bytes_s[i])},
         }
-        bubble_s = runtime * (pp - 1.0) / fill
+        bubble_s = runtime * ramp / fill
         if bound == "compute":
             breakdown = {"compute_alpha": float(t.comp_alpha_s[i]),
                          "compute_flops": float(t.comp_flops_s[i])}
@@ -112,10 +124,14 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
                 "tp_sync_bytes": net["tp"]["bytes_over_bw"],
                 "pp_p2p_alpha": net["pp"]["alpha_steps"],
                 "pp_p2p_bytes": net["pp"]["bytes_over_bw"],
+                "ep_dispatch_alpha": net["ep"]["alpha_steps"],
+                "ep_dispatch_bytes": net["ep"]["bytes_over_bw"],
             }
         out.append({
-            "mesh": (f"dp{dp}xtp{tp}" + (f"xpp{pp}" if pp > 1 else "")),
-            "dp": dp, "tp": tp, "pp": pp, "microbatches": m,
+            "mesh": (f"dp{dp}xtp{tp}" + (f"xpp{pp}" if pp > 1 else "")
+                     + (f"xep{ep}" if ep > 1 else "")),
+            "dp": dp, "tp": tp, "pp": pp, "ep": ep, "microbatches": m,
+            "vstages": vs,
             "zero_stage": zero, "remat": bool(grid.remat),
             "algorithm": grid.algorithms[int(grid.req_idx[i])],
             "dp_algo": dp_algo, "tp_algo": tp_algo,
@@ -132,7 +148,7 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
                 "network": net,
             },
             "pipeline_bubble": {"fill": fill,
-                                "fraction": (pp - 1.0) / fill,
+                                "fraction": ramp / fill,
                                 "seconds": bubble_s},
             "breakdown": breakdown,
         })
@@ -170,6 +186,8 @@ def explain_dict(grid: "PlanGrid") -> Dict:
         "seq": grid.seq,
         "pod_size": grid.pod_size,
         "max_pp": grid.max_pp,
+        "max_ep": grid.max_ep,
+        "interleave": grid.interleave,
         "algorithms": list(grid.algorithms),
         "zero_stages": list(grid.zero_stages),
         "remat": bool(grid.remat),
@@ -190,16 +208,25 @@ def _ms(s: float) -> str:
 
 
 def format_explain_table(records: Sequence[Dict]) -> str:
-    """Per-candidate attribution as a table section (one grid point)."""
+    """Per-candidate attribution as a table section (one grid point).
+
+    The ep dispatch columns appear only when some candidate actually
+    carries an ep axis, keeping the three-axis table unchanged."""
+    eped = any(r.get("ep", 1) > 1 for r in records)
     head = (f"{'rank':>4} {'mesh':>12} {'mb':>4} {'z':>2} "
             f"{'comp ms':>8} {'mem ms':>8} "
             f"{'dpα ms':>8} {'dpB ms':>8} {'tpα ms':>8} {'tpB ms':>8} "
-            f"{'ppα ms':>8} {'ppB ms':>8} {'bubble':>7} "
+            f"{'ppα ms':>8} {'ppB ms':>8} "
+            + (f"{'epα ms':>8} {'epB ms':>8} " if eped else "")
+            + f"{'bubble':>7} "
             f"{'step ms':>8} {'bound':>7}")
     lines = [head, "-" * len(head)]
     for r, rec in enumerate(records):
         t = rec["terms"]
         net = t["network"]
+        ep_cols = (
+            f"{_ms(net['ep']['alpha_steps'])} "
+            f"{_ms(net['ep']['bytes_over_bw'])} " if eped else "")
         lines.append(
             f"{r + 1:>4} {rec['mesh']:>12} {rec['microbatches']:>4} "
             f"{rec['zero_stage']:>2} "
@@ -207,7 +234,8 @@ def format_explain_table(records: Sequence[Dict]) -> str:
             f"{_ms(net['dp']['alpha_steps'])} {_ms(net['dp']['bytes_over_bw'])} "
             f"{_ms(net['tp']['alpha_steps'])} {_ms(net['tp']['bytes_over_bw'])} "
             f"{_ms(net['pp']['alpha_steps'])} {_ms(net['pp']['bytes_over_bw'])} "
-            f"{100 * rec['pipeline_bubble']['fraction']:6.1f}% "
+            + ep_cols
+            + f"{100 * rec['pipeline_bubble']['fraction']:6.1f}% "
             f"{_ms(rec['runtime'])} {rec['bottleneck']:>7}")
     return "\n".join(lines)
 

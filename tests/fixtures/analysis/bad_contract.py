@@ -24,3 +24,10 @@ def names_missing_param(x):
 @shape_contract("x:(c,), x:(c,) -> (c,)")       # -> contract-duplicate-param
 def names_param_twice(x):
     return x
+
+
+@shape_contract("payload_bytes:(*g), ep:(*g) -> (*g)")  # -> contract-unknown-param
+def ep_dispatch_names_wrong_param(payload_bytes, group_size):
+    # an ep-axis kernel whose contract names `ep` but whose signature says
+    # `group_size` — the broadcast grid would silently skip the ep check
+    return payload_bytes

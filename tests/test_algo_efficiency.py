@@ -432,7 +432,9 @@ GOLDEN_TOP_KEYS = {"arch", "chips", "batch", "seq", "pod_size", "algo",
                    # ISSUE 5: the pipeline-parallel third axis
                    "max_pp",
                    # ISSUE 6: ZeRO search space + the capacity-cut summary
-                   "zero_stages", "remat", "capacity"}
+                   "zero_stages", "remat", "capacity",
+                   # ISSUE 9: expert parallelism + interleaved 1F1B
+                   "max_ep", "interleave"}
 GOLDEN_PLAN_KEYS = {"mesh", "chips", "algo_label", "dp", "tp", "algorithm",
                     "flops", "mem_bytes", "net_bytes", "t_compute",
                     "t_memory", "t_network", "runtime", "bottleneck",
@@ -442,7 +444,9 @@ GOLDEN_PLAN_KEYS = {"mesh", "chips", "algo_label", "dp", "tp", "algorithm",
                     "pp", "microbatches", "pp_link",
                     # ISSUE 6: memory feasibility rides along
                     "zero_stage", "hbm_bytes", "hbm_used_gb", "fits",
-                    "remat"}
+                    "remat",
+                    # ISSUE 9: ep axis + interleaved virtual stages
+                    "ep", "ep_link", "vstages"}
 GOLDEN_FLIP_KEYS = {"axis", "group_size", "link", "bandwidth", "alpha",
                     "flip_payload_bytes", "small_payload_algo",
                     "large_payload_algo"}

@@ -130,9 +130,16 @@ def test_units_rules_fire_on_fixture():
 
 
 def test_contract_rules_fire_on_fixture():
-    _, _, rules = _rules(os.path.join(FIXTURES, "bad_contract.py"))
+    findings, _, rules = _rules(os.path.join(FIXTURES, "bad_contract.py"))
     assert {"contract-bad-spec", "contract-arity", "contract-unknown-param",
             "contract-duplicate-param"} <= rules
+    # the ep-kernel fixture (contract names `ep`, signature disagrees)
+    # fires too — ISSUE 9 pins the ep-axis kernels into the corpus
+    src = open(os.path.join(FIXTURES, "bad_contract.py")).read().splitlines()
+    ep_def = next(i for i, t in enumerate(src, start=1)
+                  if "def ep_dispatch_names_wrong_param" in t)
+    assert any(f.rule == "contract-unknown-param"
+               and abs(f.line - ep_def) <= 2 for f in findings)
 
 
 def test_state_rules_fire_on_fixture():

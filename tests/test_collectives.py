@@ -82,3 +82,53 @@ class TestStrategyAccounting:
     def test_pp_boundary(self):
         assert coll.pp_boundary_bytes(1e6, 1) == 0.0
         assert coll.pp_boundary_bytes(1e6, 4) == pytest.approx(2e6)
+
+
+class TestAllToAll:
+    """α–β properties of the all-to-all the ep axis prices (ISSUE 9)."""
+
+    def test_wire_is_n_minus_1_over_n(self):
+        for n in (2, 4, 8, 60):
+            c = coll.all_to_all(1e9, n)
+            assert c.wire_bytes == pytest.approx((n - 1) / n * 1e9)
+
+    def test_steps_are_n_minus_1(self):
+        for n in (2, 4, 16):
+            assert coll.all_to_all(1.0, n).steps == n - 1
+
+    def test_size_1_group_is_exactly_zero(self):
+        c = coll.all_to_all(1e9, 1)
+        assert c.wire_bytes == 0.0 and c.steps == 0.0
+
+    def test_wire_monotonic_in_group_size(self):
+        sizes = np.array([1, 2, 4, 8, 64])
+        wire = coll.all_to_all(1e9, sizes).wire_bytes
+        assert (np.diff(wire) > 0).all()
+
+    def test_time_is_alpha_steps_plus_bytes_over_bw(self):
+        c = coll.all_to_all(1e9, 8)
+        bw, alpha = 50e9, 1e-6
+        assert c.time(bw, alpha) == pytest.approx(
+            alpha * c.steps + c.wire_bytes / bw)
+
+
+class TestEpDispatchCombine:
+    def test_is_two_all_to_alls(self):
+        one = coll.all_to_all(3e8, 4)
+        both = coll.ep_dispatch_combine(3e8, 4)
+        assert both.wire_bytes == pytest.approx(2 * one.wire_bytes)
+        assert both.steps == pytest.approx(2 * one.steps)
+
+    def test_ep1_is_exactly_zero(self):
+        c = coll.ep_dispatch_combine(1e9, 1)
+        assert c.wire_bytes == 0.0 and c.steps == 0.0
+
+    def test_grid_equals_scalar(self):
+        """Broadcast pricing must match per-candidate scalar pricing."""
+        payload = np.array([1e6, 1e6, 5e8, 5e8])
+        ep = np.array([1, 4, 2, 60])
+        grid = coll.ep_dispatch_combine(payload, ep)
+        for i in range(payload.size):
+            one = coll.ep_dispatch_combine(float(payload[i]), int(ep[i]))
+            assert grid.wire_bytes[i] == one.wire_bytes
+            assert grid.steps[i] == one.steps

@@ -114,6 +114,33 @@ class TestTrainingAccounting:
         # ...but m below pp holds every microbatch it has: same bytes
         assert a1 == a2 == a4
 
+    def test_ep_shards_exactly_the_expert_state(self):
+        """ep divides the routed expert tensors (and their grads and
+        optimizer states); the dense remainder replicates (ISSUE 9)."""
+        from repro.launch.specs import expert_param_counts
+        cfg = _cfg("qwen2-moe-a2.7b")
+        n_total, _ = param_counts(cfg)
+        e_total, _ = expert_param_counts(cfg)
+        base = mem.training_working_set(cfg, batch=8, seq=128)
+        ep4 = mem.training_working_set(cfg, batch=8, seq=128, ep=4)
+        want_frac = ((n_total - e_total) + e_total / 4.0) / n_total
+        for field in ("params", "grads", "opt"):
+            assert float(getattr(ep4, field)) == pytest.approx(
+                float(getattr(base, field)) * want_frac, rel=1e-12)
+        # activations are per-token, not per-expert: untouched by ep
+        assert float(ep4.activations) == float(base.activations)
+        # ep = 1 lanes inside a mixed grid stay bit-identical
+        mixed = mem.training_working_set(cfg, batch=8, seq=128,
+                                         ep=np.array([1.0, 4.0]))
+        assert float(mixed.total[0]) == float(base.total)
+        assert float(mixed.total[1]) == float(ep4.total)
+
+    def test_ep_is_a_noop_for_dense_models(self):
+        cfg = _cfg()                        # qwen2-7b: no routed experts
+        base = mem.training_working_set(cfg, batch=8, seq=128)
+        ep = mem.training_working_set(cfg, batch=8, seq=128, ep=4)
+        assert float(ep.total) == float(base.total)
+
 
 # --- vectorized path ≡ scalar reference on random grids -----------------------
 

@@ -87,3 +87,53 @@ def test_moe_active_params_much_smaller_than_total():
     from repro.configs import get_config
     total, active = sp.param_counts(get_config("qwen3-moe-30b-a3b"))
     assert active < total * 0.2   # 3B active of 30B
+
+
+def test_moe_active_params_use_padded_expert_count():
+    """Padding the expert table must not inflate *active* params: the k-of-E
+    selection divides by the padded count the router actually scores over
+    (regression: divisor used raw n_experts, overcounting active FLOPs)."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-moe-a2.7b")
+    base_total, base_active = sp.param_counts(cfg)
+    padded = cfg.replace(pad_experts_to=64)          # 60 -> 64
+    pad_total, pad_active = sp.param_counts(padded)
+    assert pad_total > base_total                    # 4 extra expert tensors
+    # tensors grow by E_pad/E but the k-of-E_pad fraction shrinks by the
+    # same ratio: active per token is invariant under padding (the buggy
+    # raw-E divisor inflated it by E_pad/E)
+    assert pad_active == pytest.approx(base_active, rel=1e-12)
+
+
+def test_expert_param_counts_subset_of_totals():
+    from repro.configs import get_config
+    cfg = get_config("qwen2-moe-a2.7b")
+    total, active = sp.param_counts(cfg)
+    e_total, e_active = sp.expert_param_counts(cfg)
+    assert 0 < e_active < e_total < total
+    # routed experts dominate this config's parameter budget
+    assert e_total > total * 0.5
+    # dense config has no routed experts
+    assert sp.expert_param_counts(get_config("qwen2-7b")) == (0.0, 0.0)
+
+
+def test_balanced_topk_routing_gives_unit_aux_loss():
+    """A perfectly balanced top-k assignment must score aux ≈ 1 (the loss's
+    fixed point).  Regression: counting only the top-1 choice left ce
+    summing to 1/k and dragged balanced aux toward 1/k."""
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod
+    cfg = get_config("qwen2-moe-a2.7b")
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = 3 * E
+    # token t prefers experts {t, t+1, ..., t+k-1} (mod E): every expert is
+    # chosen by exactly T*k/E tokens, i.e. a perfectly balanced router
+    logits = np.full((T, E), -20.0, dtype=np.float32)
+    for t in range(T):
+        for j in range(k):
+            logits[t, (t + j) % E] = 20.0
+    gates, idx, aux = moe_mod.route(jnp.asarray(logits), cfg)
+    assert gates.shape == (T, k) and idx.shape == (T, k)
+    counts = np.bincount(np.asarray(idx).ravel(), minlength=E)
+    assert (counts == T * k // E).all()
+    assert float(aux) == pytest.approx(1.0, rel=1e-3)

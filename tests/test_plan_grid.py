@@ -154,11 +154,14 @@ def _scalar_reference(cfg, hw, chips, batch, seq, pod_size, max_pp,
                 continue
             for m in pg.microbatch_choices(batch // dp, pp):
                 fill = m + pp - 1.0
-                f_step = 6.0 * n_active * tokens / (dp * tp * pp)
+                # ceil split: when pp ∤ n_layers the widest stage is the
+                # critical path (ISSUE 9); exact n_layers/pp when pp | L
+                stage_layers = float(np.ceil(cfg.n_layers / pp))
+                f_step = 6.0 * n_active * tokens / (dp * tp * pp) \
+                    * (stage_layers * pp / cfg.n_layers)
                 f_mb = f_step / m
                 act = (tokens / dp) * width * act_dtype
                 act_mb = act / m
-                stage_layers = cfg.n_layers / pp
                 mem_mb = params_bytes / (tp * pp) \
                     + 2.0 * stage_layers * act_mb
                 dp_link = link_of(dp, tp * pp)
@@ -454,6 +457,226 @@ class TestPipelineAxis:
         assert any(p.pp == 4 for p in plans)
         assert not any(p.pp == 8 for p in plans)
         assert all((4 // p.dp) % p.microbatches == 0 for p in plans)
+
+
+# --- expert parallelism: the ep mesh axis (ISSUE 9) ---------------------------
+
+
+def _moe_cfg():
+    return _cfg("qwen2-moe-a2.7b")         # 60 routed experts, top-4, cf 1.25
+
+
+class TestExpertParallelAxis:
+    def test_ep_choices_divide_padded_expert_count(self):
+        cfg = _moe_cfg()                    # E_pad = 60
+        assert pg.ep_choices(cfg, 16, 16) == [1, 2, 4]   # 8, 16 ∤ 60
+        assert pg.ep_choices(cfg, 16, 2) == [1, 2]       # max_ep caps
+        padded = cfg.replace(pad_experts_to=64)
+        assert pg.ep_choices(padded, 16, 16) == [1, 2, 4, 8, 16]
+        dense = _cfg("qwen2-7b")
+        assert pg.ep_choices(dense, 16, 16) == [1]       # no routed experts
+
+    def test_ep1_candidates_identical_inside_larger_grid(self):
+        """The ep axis only adds candidates — ep = 1 rows carry the exact
+        same numbers as a search that never heard of expert parallelism."""
+        cfg = _moe_cfg()
+        base = {(p.dp, p.tp, p.pp, p.microbatches, p.zero_stage): p
+                for p in plan(cfg, TPU_V5E, 16, batch=16, seq=512,
+                              max_pp=2, check_capacity=False)}
+        wide = [p for p in plan(cfg, TPU_V5E, 16, batch=16, seq=512,
+                                max_pp=2, max_ep=4, check_capacity=False)
+                if p.ep == 1]
+        assert {(p.dp, p.tp, p.pp, p.microbatches, p.zero_stage)
+                for p in wide} == set(base)
+        for p in wide:
+            b = base[(p.dp, p.tp, p.pp, p.microbatches, p.zero_stage)]
+            assert (p.runtime, p.t_compute, p.t_memory, p.t_network) == \
+                (b.runtime, b.t_compute, b.t_memory, b.t_network)
+            assert (p.mesh, p.hbm_bytes, p.flops) == \
+                (b.mesh, b.hbm_bytes, b.flops)
+
+    def test_ep_meshes_use_all_chips_and_divide_experts(self):
+        plans = plan(_moe_cfg(), TPU_V5E, 16, batch=16, seq=512, max_pp=2,
+                     max_ep=4, check_capacity=False)
+        assert any(p.ep > 1 for p in plans)
+        for p in plans:
+            assert p.dp * p.tp * p.pp * p.ep == 16 == p.chips
+            if p.ep > 1:
+                assert 60 % p.ep == 0
+                assert f"xep{p.ep}" in p.mesh
+            else:
+                assert "xep" not in p.mesh
+
+    def test_ep_dispatch_pricing_matches_scalar_recomputation(self):
+        """An ep > 1 row's attributed dispatch+combine time re-derives
+        exactly from scalar collective calls: fill · layers-per-stage ·
+        (α·steps + derated wire / bw) on the axis's own link."""
+        cfg = _moe_cfg()
+        hw = ALPHA_POD                      # nonzero α so both terms bite
+        grid = pg.plan_grid(cfg, hw, [16], [16], seq=512, max_pp=2,
+                            max_ep=4, check_capacity=False, explain=True)
+        t = grid.explain_terms
+        width = pg._model_width(cfg)
+        tokens = 16.0 * 512
+        checked = 0
+        for i in range(grid.runtime.size):
+            ep = int(grid.ep[i])
+            if ep <= 1:
+                assert t.net_ep_alpha_s[i] == 0.0
+                assert t.net_ep_bytes_s[i] == 0.0
+                continue
+            checked += 1
+            dp, pp = float(grid.dp[i]), float(grid.pp[i])
+            m = float(grid.microbatches[i])
+            fill = m + pp - 1.0
+            act_mb = (tokens / dp) * width * 2 / m
+            payload = act_mb * cfg.moe_top_k * cfg.capacity_factor
+            cost = coll.ep_dispatch_combine(payload, ep)
+            derate = float(pg.moe_routing_derate(
+                np.float64(ep), np.float64(tokens / (dp * m)),
+                n_experts=cfg.n_experts, pad_experts=cfg.pad_experts_to,
+                top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor))
+            link = "pod" if grid.ep_pod[i] else None
+            stage_layers = float(np.ceil(cfg.n_layers / pp))
+            assert t.net_ep_alpha_s[i] == pytest.approx(
+                fill * hw.alpha_for(link) * stage_layers * cost.steps,
+                rel=1e-12)
+            assert t.net_ep_bytes_s[i] == pytest.approx(
+                fill * stage_layers * cost.wire_bytes * derate
+                / hw.bandwidth_for(link), rel=1e-12)
+        assert checked > 0
+
+    def test_ep_a2a_rides_the_pod_link_when_axis_spans_pods(self):
+        """ep nests outside tp: the dispatch all-to-all leaves the pod
+        exactly when ep · tp exceeds the pod size."""
+        plans = plan(_moe_cfg(), ALPHA_POD, 16, batch=16, seq=512,
+                     pod_size=4, max_pp=2, max_ep=4, check_capacity=False)
+        spanning = [p for p in plans if p.ep > 1 and p.ep * p.tp > 4]
+        contained = [p for p in plans if p.ep > 1 and p.ep * p.tp <= 4]
+        assert spanning and contained
+        assert all(p.ep_link == "pod" for p in spanning)
+        assert all(p.ep_link == "ici" for p in contained)
+
+    def test_routing_derate_properties(self):
+        kw = dict(n_experts=60, pad_experts=0, top_k=4,
+                  capacity_factor=1.25)
+        # ep = 1 is exactly 1.0 — the dense slice stays bit-identical
+        assert pg.moe_routing_derate(
+            np.array([1.0]), np.array([4096.0]), **kw)[0] == 1.0
+        # imbalance always costs, and costs more with more shards
+        d = pg.moe_routing_derate(np.array([2.0, 4.0]),
+                                  np.array([4096.0, 4096.0]), **kw)
+        assert (d > 1.0).all() and d[1] > d[0]
+        # more tokens per shard → tighter concentration → smaller derate
+        busy = pg.moe_routing_derate(np.array([4.0]), np.array([65536.0]),
+                                     **kw)
+        assert busy[0] < d[1]
+        # the capacity factor caps what overflow can cost
+        starved = pg.moe_routing_derate(np.array([60.0]), np.array([1.0]),
+                                        **kw)
+        assert starved[0] <= 1.25 * (1.0 + 1e-12)
+        # padding experts dilutes real ones: E_pad/E shows up directly
+        pad = pg.moe_routing_derate(np.array([2.0]), np.array([4096.0]),
+                                    n_experts=60, pad_experts=64, top_k=4,
+                                    capacity_factor=1.25)
+        assert pad[0] > d[0]
+
+    def test_dense_config_rejects_ep_request(self):
+        with pytest.raises(ValueError, match="max_ep"):
+            pg.plan_grid(_cfg(), CLX, [8], [512], max_ep=0)
+
+    def test_pinned_pr9_moe_golden(self):
+        """The ISSUE 9 acceptance golden: qwen2-moe on 16 v5e chips with
+        the ep axis open.  Committed bit-for-bit; the capacity check is
+        off because a 14 B fp32 working set does not fit 16 GB chips at
+        these meshes (same precedent as the PR 4 pod golden).  The grid
+        must still rank ep > 1 meshes whose network term is dominated by
+        the dispatch+combine all-to-all."""
+        g = _golden("plan_pr9_qwen2_moe_c16_ep.json")
+        cfg = _moe_cfg()
+        plans = plan(cfg, TPU_V5E, 16, batch=g["batch"], seq=g["seq"],
+                     max_pp=g["max_pp"], max_ep=g["max_ep"],
+                     check_capacity=False)
+        _assert_bit_identical(plans, g)
+        ep_rows = [p for p in plans if p.ep > 1]
+        assert len(ep_rows) >= 10
+        # attribution: the best ep > 1 row is network-bound on dispatch
+        grid = pg.plan_grid(cfg, TPU_V5E, [16], [g["batch"]], seq=g["seq"],
+                            max_pp=g["max_pp"], max_ep=g["max_ep"],
+                            check_capacity=False, explain=True)
+        t = grid.explain_terms
+        i = min(np.flatnonzero(grid.ep > 1),
+                key=lambda j: grid.runtime[j])
+        ep_s = t.net_ep_alpha_s[i] + t.net_ep_bytes_s[i]
+        assert ep_s > 0.5 * grid.t_network[i]      # a2a dominates network
+        assert grid.t_network[i] == grid.runtime[i]  # and network binds
+
+
+# --- uneven pipeline stages + interleaved 1F1B (ISSUE 9) ----------------------
+
+
+class TestUnevenAndInterleavedPipeline:
+    def test_indivisible_pp_priced_with_ceil_stage(self):
+        """28 layers / pp 8 → 4-layer widest stage: flops carry exactly
+        the 32/28 round-up, and the mesh is enumerated at all (the old
+        planner required pp | n_layers)."""
+        cfg = _cfg("qwen2-7b")              # 28 layers
+        plans = plan(cfg, TPU_V5E, 16, batch=16, seq=128, max_pp=8,
+                     check_capacity=False)
+        _, n_active = pg.param_counts(cfg)
+        tokens = 16.0 * 128
+        p8 = [p for p in plans if p.pp == 8]
+        assert p8
+        for p in p8:
+            want = 6.0 * n_active * tokens / (p.dp * p.tp * 8) * (32.0 / 28.0)
+            assert p.flops == pytest.approx(want, rel=1e-12)
+
+    def test_pp_beyond_layer_count_is_pruned(self):
+        cfg = _cfg()                        # 8 layers
+        plans = plan(cfg, CLX, 64, batch=64, max_pp=64)
+        assert all(p.pp <= 8 for p in plans)
+        grid = pg.plan_grid(cfg, CLX, [64], [64], max_pp=64, explain=True)
+        stats = grid.prune_reasons[(0, 0)]
+        assert stats["pp_exceeds_layers"] > 0
+
+    def test_interleave_shrinks_bubble_and_grows_p2p(self):
+        """Interleaved 1F1B divides the bubble by the virtual-stage count
+        and multiplies the boundary p2p traffic by it."""
+        cfg = _cfg("qwen2-7b")              # 28 layers
+        kw = dict(batch=16, seq=128, max_pp=4, check_capacity=False)
+        base = {(p.dp, p.tp, p.pp, p.microbatches): p
+                for p in plan(cfg, TPU_V5E, 16, **kw)}
+        inter = plan(cfg, TPU_V5E, 16, interleave=7, **kw)
+        saw = 0
+        for p in inter:
+            b = base[(p.dp, p.tp, p.pp, p.microbatches)]
+            if p.pp == 1:
+                assert p.vstages == 1
+                assert (p.runtime, p.net_bytes) == (b.runtime, b.net_bytes)
+                continue
+            saw += 1
+            assert p.vstages == min(7, 28 // p.pp)
+            assert b.vstages == 1
+            assert p.bubble_fraction < b.bubble_fraction
+            assert p.net_bytes > b.net_bytes        # v× boundary p2p
+            assert p.flops == b.flops               # compute untouched
+        assert saw
+
+    def test_interleave_bubble_algebra(self):
+        """bubble = ramp / (m + ramp) with ramp = (pp − 1)/vstages."""
+        cfg = _cfg("qwen2-7b")
+        plans = plan(cfg, TPU_V5E, 16, batch=16, seq=128, max_pp=4,
+                     interleave=4, check_capacity=False)
+        for p in plans:
+            if p.pp <= 1:
+                continue
+            ramp = (p.pp - 1.0) / p.vstages
+            assert p.bubble_fraction == pytest.approx(
+                ramp / (p.microbatches + ramp), rel=1e-12)
+
+    def test_bad_interleave_rejected(self):
+        with pytest.raises(ValueError, match="interleave"):
+            pg.plan_grid(_cfg(), CLX, [8], [512], interleave=0)
 
 
 # --- memory-capacity feasibility (the ISSUE 6 tentpole) -----------------------
