@@ -60,10 +60,12 @@ ATTR_UNITS: Dict[str, Unit] = {
     "activations": BYTES,
     "kv_cache": BYTES,
     "hbm_used_bytes": BYTES,
+    "persisted": BYTES,               # WorkingSet: bytes a checkpoint writes
     # rates
     "peak_flops": FLOPS_PER_S,
     "hbm_bw": BYTES_PER_S,
     "net_bw": BYTES_PER_S,
+    "ckpt_bw": BYTES_PER_S,
     # seconds
     "alpha_compute": SECONDS,
     "alpha_memory": SECONDS,
@@ -85,12 +87,28 @@ ATTR_UNITS: Dict[str, Unit] = {
     "net_pp_bytes_s": SECONDS,
     "net_ep_alpha_s": SECONDS,
     "net_ep_bytes_s": SECONDS,
+    # resilience (FailureModel, MeshPlan goodput fields, VirtualCosts)
+    "mtbf_chip_s": SECONDS,
+    "restart_s": SECONDS,
+    "reshard_s": SECONDS,
+    "downtime_s": SECONDS,
+    "ckpt_overhead_s": SECONDS,
+    "rework_s": SECONDS,
+    "ckpt_interval_s": SECONDS,
+    "t_step_s": SECONDS,
+    "t_ckpt_s": SECONDS,
+    "wall_s": SECONDS,
+    "useful_s": SECONDS,
+    "backoff_base_s": SECONDS,
+    "backoff_max_s": SECONDS,
     # dimensionless
     "net_steps": DIMENSIONLESS,
     "steps": DIMENSIONLESS,
     "compute_eff": DIMENSIONLESS,
     "model_rel_error": DIMENSIONLESS,
     "rel_spread": DIMENSIONLESS,
+    "goodput": DIMENSIONLESS,
+    "backoff_jitter": DIMENSIONLESS,
 }
 
 # --- return-unit declarations -------------------------------------------------
@@ -115,6 +133,15 @@ RETURN_UNITS: Dict[str, object] = {
     "training_working_set": None,     # WorkingSet object
     "decode_working_set": None,
     "total": BYTES,                   # WorkingSet.total property-as-call
+    # resilience.failures kernels
+    "mesh_mtbf_s": SECONDS,
+    "ckpt_time_s": SECONDS,
+    "young_daly_interval_s": SECONDS,
+    "failure_overhead_terms": (SECONDS, SECONDS, SECONDS),
+    "goodput_fraction": DIMENSIONLESS,
+    "goodput_terms": (SECONDS, SECONDS, SECONDS, SECONDS, DIMENSIONLESS),
+    "predicted_goodput": DIMENSIONLESS,
+    "goodput_analytic": DIMENSIONLESS,
 }
 
 # --- parameter declarations ---------------------------------------------------
@@ -138,6 +165,16 @@ PARAM_UNITS: Dict[str, Tuple[Tuple[str, Optional[Unit]], ...]] = {
     "moe_routing_derate": (("ep", DIMENSIONLESS),
                            ("tokens_mb", DIMENSIONLESS)),
     "time": (("link_bw", BYTES_PER_S), ("alpha", SECONDS)),
+    "mesh_mtbf_s": (("chips", DIMENSIONLESS), ("mtbf_chip_s", SECONDS)),
+    "ckpt_time_s": (("persisted_bytes", BYTES), ("ckpt_bw", BYTES_PER_S)),
+    "young_daly_interval_s": (("t_ckpt_s", SECONDS), ("mtbf_s", SECONDS)),
+    "failure_overhead_terms": (
+        ("t_step_s", SECONDS), ("t_ckpt_s", SECONDS),
+        ("interval_s", SECONDS), ("mtbf_s", SECONDS),
+        ("downtime_s", SECONDS)),
+    "goodput_fraction": (
+        ("t_step_s", SECONDS), ("ckpt_overhead_s", SECONDS),
+        ("rework_s", SECONDS), ("restart_s", SECONDS)),
 }
 
 # --- suffix conventions -------------------------------------------------------
@@ -165,6 +202,7 @@ SUFFIX_UNITS: Dict[str, object] = {
     "_ms": EXCLUDED,
     "_us": EXCLUDED,
     "_ns": EXCLUDED,
+    "_hours": EXCLUDED,               # MTBF CLI surface: hours, not seconds
 }
 
 
@@ -178,6 +216,8 @@ NAME_UNITS: Dict[str, Unit] = {
     "net_bw": BYTES_PER_S,
     "link_bw": BYTES_PER_S,
     "bw": BYTES_PER_S,
+    "ckpt_bw": BYTES_PER_S,
+    "goodput": DIMENSIONLESS,
 }
 
 

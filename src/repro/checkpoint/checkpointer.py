@@ -15,7 +15,14 @@ Guarantees:
     the manifest and the commit marker after a barrier (here: thread join);
   * async — ``save`` can run in a background thread (training continues;
     the previous async save is joined first, bounding staleness to one);
-  * keep-N GC of old committed steps.
+  * keep-N GC of old committed steps;
+  * integrity — each shard's crc32 is recorded in the manifest at save;
+    ``latest_step`` cheaply skips committed steps whose files are missing
+    or empty (a torn write that still managed to commit), and ``restore``
+    verifies checksums before trusting any byte: a corrupt step is
+    *quarantined* (renamed ``step_*.quarantined_*`` so no later scan
+    picks it up) and restore falls back to the previous committed step —
+    a bad checkpoint costs one interval of rework, never the job.
 
 Restore reconstructs the pytree on the *current* topology: parameters are
 saved in full logical shapes (device-gathered per shard), so restoring onto
@@ -29,6 +36,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -38,8 +46,31 @@ import numpy as np
 COMMIT_MARKER = "COMMITTED"
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A committed checkpoint failed integrity verification."""
+
+
 def _step_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:09d}")
+
+
+def _step_of(name: str) -> Optional[int]:
+    """Step number of a live ``step_NNN`` directory name; None for
+    anything else (tmp dirs, quarantined steps, strays)."""
+    if not name.startswith("step_"):
+        return None
+    tail = name[len("step_"):]
+    return int(tail) if tail.isdigit() else None
+
+
+def _crc32_of(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            buf = f.read(chunk)
+            if not buf:
+                return crc
+            crc = zlib.crc32(buf, crc)
 
 
 class Checkpointer:
@@ -93,8 +124,15 @@ class Checkpointer:
         per = (len(host_leaves) + self.n_hosts - 1) // max(self.n_hosts, 1)
         lo, hi = self.host_id * per, min((self.host_id + 1) * per,
                                          len(host_leaves))
-        np.savez(os.path.join(tmp, f"shard_{self.host_id:05d}.npz"),
+        shard_name = f"shard_{self.host_id:05d}.npz"
+        np.savez(os.path.join(tmp, shard_name),
                  **{str(i): host_leaves[i] for i in range(lo, hi)})
+        # crc32 over the written file: restore refuses to trust any byte
+        # that does not hash back (bitrot, torn writes, tampering).  In a
+        # multi-host job each host would publish its own checksum before
+        # the barrier; single-process, host 0 owns every shard.
+        meta["checksums"] = {
+            shard_name: _crc32_of(os.path.join(tmp, shard_name))}
         if self.host_id == 0:
             # In a real multi-host job a barrier precedes the commit (every
             # host has written its shard file by barrier entry); in this
@@ -110,33 +148,94 @@ class Checkpointer:
             self._gc()
 
     # ---- restore --------------------------------------------------------------
+    def _quick_ok(self, d: str) -> bool:
+        """Cheap structural check: a committed step must still have its
+        manifest and at least one non-empty shard file (catches zero-length
+        truncation without hashing anything)."""
+        if not os.path.exists(os.path.join(d, "manifest.json")):
+            return False
+        shards = [n for n in os.listdir(d)
+                  if n.startswith("shard_") and n.endswith(".npz")]
+        return bool(shards) and all(
+            os.path.getsize(os.path.join(d, n)) > 0 for n in shards)
+
     def latest_step(self) -> Optional[int]:
         steps = []
         for name in os.listdir(self.root):
             d = os.path.join(self.root, name)
-            if (name.startswith("step_")
-                    and os.path.exists(os.path.join(d, COMMIT_MARKER))):
-                steps.append(int(name.split("_")[1]))
+            if (_step_of(name) is not None
+                    and os.path.exists(os.path.join(d, COMMIT_MARKER))
+                    and self._quick_ok(d)):
+                steps.append(_step_of(name))
         return max(steps) if steps else None
+
+    def _quarantine(self, step: int) -> str:
+        """Move a corrupt step aside so no scan trusts it again (kept on
+        disk, not deleted — the bytes are evidence)."""
+        d = _step_dir(self.root, step)
+        q = f"{d}.quarantined_{int(time.time() * 1e3)}"
+        os.replace(d, q)
+        return q
+
+    def _verify(self, d: str) -> None:
+        """Checksum every shard against the manifest; raises
+        CheckpointCorruptionError on any mismatch.  Manifests predating
+        checksums (older checkpoints) skip hash verification."""
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                checksums = json.load(f).get("checksums") or {}
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptionError(f"{d}: unreadable manifest: {e}")
+        for name, want in checksums.items():
+            path = os.path.join(d, name)
+            if not os.path.exists(path):
+                raise CheckpointCorruptionError(f"{d}: missing shard {name}")
+            got = _crc32_of(path)
+            if got != want:
+                raise CheckpointCorruptionError(
+                    f"{d}: shard {name} crc32 {got:#010x} != "
+                    f"manifest {want:#010x}")
 
     def restore(self, like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Tuple[Any, int]:
         """Rebuild the pytree of ``like``'s structure.  ``shardings``
         (optional pytree of NamedSharding) re-shards onto the current mesh —
-        the elastic-restart path."""
-        if step is None:
+        the elastic-restart path.
+
+        With ``step=None`` (the auto-resume path), a step that fails
+        checksum verification is quarantined and restore falls back to the
+        previous committed step until one verifies.  An explicitly
+        requested ``step`` is also verified, but corruption raises (the
+        caller asked for those exact bytes — silently substituting older
+        ones would be worse than failing)."""
+        if step is not None:
+            return self._restore_step(like, step, shardings), step
+        while True:
             step = self.latest_step()
             if step is None:
-                raise FileNotFoundError(f"no committed checkpoint in {self.root}")
+                raise FileNotFoundError(
+                    f"no committed checkpoint in {self.root}")
+            try:
+                return self._restore_step(like, step, shardings), step
+            except CheckpointCorruptionError:
+                self._quarantine(step)
+
+    def _restore_step(self, like: Any, step: int, shardings: Any) -> Any:
         d = _step_dir(self.root, step)
         if not os.path.exists(os.path.join(d, COMMIT_MARKER)):
             raise FileNotFoundError(f"checkpoint {d} not committed")
+        self._verify(d)
         arrays: Dict[int, np.ndarray] = {}
-        for name in sorted(os.listdir(d)):
-            if name.startswith("shard_") and name.endswith(".npz"):
-                with np.load(os.path.join(d, name)) as z:
-                    for k in z.files:
-                        arrays[int(k)] = z[k]
+        try:
+            for name in sorted(os.listdir(d)):
+                if name.startswith("shard_") and name.endswith(".npz"):
+                    with np.load(os.path.join(d, name)) as z:
+                        for k in z.files:
+                            arrays[int(k)] = z[k]
+        except (OSError, ValueError, KeyError) as e:
+            # unreadable zip/npz (e.g. truncated mid-write): same corruption
+            # class as a checksum mismatch, same quarantine-and-fall-back
+            raise CheckpointCorruptionError(f"{d}: unreadable shard: {e}")
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
         assert len(arrays) == len(leaves_like), (
             f"checkpoint has {len(arrays)} leaves, expected {len(leaves_like)}")
@@ -151,13 +250,13 @@ class Checkpointer:
                 restored.append(jax.device_put(arr, flat_sh[i]))
             else:
                 restored.append(jnp.asarray(arr))
-        return jax.tree_util.tree_unflatten(treedef, restored), step
+        return jax.tree_util.tree_unflatten(treedef, restored)
 
     # ---- GC --------------------------------------------------------------------
     def _gc(self) -> None:
         steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.root)
-            if n.startswith("step_") and os.path.exists(
+            _step_of(n) for n in os.listdir(self.root)
+            if _step_of(n) is not None and os.path.exists(
                 os.path.join(self.root, n, COMMIT_MARKER)))
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(_step_dir(self.root, s), ignore_errors=True)

@@ -142,6 +142,12 @@ class HardwareSpec:
         at all — the planner's working-set model (``launch/memory``) prunes
         meshes whose per-chip footprint exceeds it.  ``0`` means unknown
         (no constraint), which every pre-existing custom spec gets for free.
+      ckpt_bw: sustained per-chip bandwidth to checkpoint storage, bytes/s.
+        Each chip persists its own shard of the training state (params +
+        optimizer states under the candidate's ZeRO/tp/pp/ep sharding), so
+        checkpoint time is ``persisted bytes per chip / ckpt_bw`` — the
+        input to the failure-aware goodput model (``repro.resilience``).
+        ``0`` means unknown: goodput planning refuses rather than divides.
     """
 
     name: str
@@ -157,6 +163,7 @@ class HardwareSpec:
     compute_eff: EfficiencyModel = EfficiencyModel()
     vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB (v5e VMEM per core)
     hbm_capacity_bytes: float = 0.0           # 0 = unknown, no feasibility cut
+    ckpt_bw: float = 0.0                      # 0 = unknown, no goodput model
 
     def effective_peak(self, flops: float) -> float:
         """The achievable compute ceiling for an ``flops``-sized unit."""
@@ -217,6 +224,7 @@ TPU_V5E = HardwareSpec(
     net_bw=50e9,
     extra_links={"pod": 25e9},
     hbm_capacity_bytes=16e9,      # 16 GB HBM per v5e chip (datasheet)
+    ckpt_bw=1e9,                  # ~1 GB/s/chip sustained to blob storage
 )
 
 #: Intel Xeon Cascade Lake socket exactly as in the paper's case study (§III):
@@ -228,6 +236,7 @@ CLX = HardwareSpec(
     net_bw=12e9,
     vmem_bytes=36 * 1024 * 1024,  # LLC, unused in analysis
     hbm_capacity_bytes=192e9,     # 6-channel DDR4 socket, 32 GB DIMMs
+    ckpt_bw=2e9,                  # local NVMe per socket
 )
 
 PRESETS: Dict[str, HardwareSpec] = {"tpu_v5e": TPU_V5E, "clx": CLX}
@@ -285,6 +294,7 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
     base = PRESETS.get(str(d.get("base", "")))
     capacity = d.get("hbm_capacity_bytes",
                      base.hbm_capacity_bytes if base is not None else 0.0)
+    ckpt_bw = d.get("ckpt_bw", base.ckpt_bw if base is not None else 0.0)
     return HardwareSpec(
         name=str(d["name"]),
         peak_flops=float(d["peak_flops"]),
@@ -301,6 +311,7 @@ def spec_from_calibration(d: Mapping) -> HardwareSpec:
         compute_eff=EfficiencyModel.from_dict(d.get("compute_eff")),
         vmem_bytes=int(d.get("vmem_bytes", HardwareSpec.vmem_bytes)),
         hbm_capacity_bytes=float(capacity),
+        ckpt_bw=float(ckpt_bw),
     )
 
 

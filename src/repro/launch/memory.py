@@ -112,6 +112,16 @@ class WorkingSet:
         return (self.params + self.grads + self.opt + self.activations
                 + self.kv_cache)
 
+    @property
+    def persisted(self) -> np.ndarray:
+        """Per-chip bytes a checkpoint must write: params + optimizer
+        states (grads and activations are transient — the checkpointer
+        saves exactly the ``TrainState`` leaves that survive a restart).
+        Under ZeRO/tp/pp/ep sharding each chip persists only its own
+        shard, which is what makes checkpoint time mesh-dependent
+        (``repro.resilience.failures.ckpt_time_s``)."""
+        return self.params + self.opt
+
 
 @shape_contract("batch:(*g), dp:(*g), tp:(*g), pp:(*g), ep:(*g), "
                 "microbatches:(*g), zero_stage:(*g) -> (*g)")

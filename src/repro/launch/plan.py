@@ -59,6 +59,8 @@ CLI::
     python -m repro.launch.plan --arch qwen2-7b --chips 16 --zero auto --remat
     python -m repro.launch.plan --arch qwen2-7b --chips 16 --zero auto \\
         --explain --trace artifacts/traces/plan.trace.json
+    python -m repro.launch.plan --arch dlrm-mlp --chips-grid 16,64 \\
+        --goodput --mtbf-hours 2000
     python -m repro.launch.plan --hardware list
 
 **Memory feasibility.**  When the spec carries a per-chip
@@ -71,6 +73,15 @@ of stages) searches ZeRO sharding as a candidate axis, ``--remat`` trades
 activation footprint for +1/3 recompute FLOPs, and
 ``--no-capacity-check`` keeps infeasible rows marked ``fit=NO`` instead
 (the what-if view).
+
+**Failure-aware goodput.**  ``--goodput`` (implied by ``--mtbf-hours H``)
+prices failures into the ranking (:mod:`repro.resilience.failures`): each
+candidate's persisted checkpoint bytes over the spec's ``ckpt_bw`` set its
+checkpoint cost, Young/Daly sets the cadence, and the amortized per-step
+checkpoint/rework/restart seconds are added to the step time before
+ranking — so a smaller mesh with a cheaper failure bill can out-rank the
+healthy winner.  Without ``--mtbf-hours`` the MTBF is infinite and the
+ranking is bit-identical to the healthy one (goodput ≡ 1).
 
 ``--pp N`` admits pipeline axes up to N stages; ``--chips-grid`` /
 ``--batch-grid`` (comma lists) switch to grid mode: the whole scaling
@@ -98,6 +109,7 @@ from repro.launch.plan_grid import (MeshPlan, PlanGrid, POD_LINK,
                                     ZERO_STAGES, feasible_meshes,
                                     param_counts, plan_grid)
 from repro.obs import trace as obs_trace
+from repro.resilience.failures import FailureModel
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
@@ -131,8 +143,9 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
          pod_size: Optional[int] = None,
          max_pp: int = 1, max_ep: int = 1, interleave: int = 1,
          zero_stages: Sequence[int] = (0,),
-         remat: bool = False, check_capacity: bool = True
-         ) -> List[MeshPlan]:
+         remat: bool = False, check_capacity: bool = True,
+         goodput: bool = False,
+         failure: Optional["FailureModel"] = None) -> List[MeshPlan]:
     """Rank every feasible (dp, tp, pp, ep, m, algorithm) by step time.
 
     A single-point slice of :func:`repro.launch.plan_grid.plan_grid` (one
@@ -157,12 +170,17 @@ def plan(cfg: ModelConfig, hw: HardwareSpec, chips: int, *,
     carries an ``hbm_capacity_bytes``, candidates whose working set cannot
     fit are pruned before pricing — the returned ranking never recommends
     a mesh that cannot hold its own state.
+
+    ``goodput``/``failure`` fold the amortized failure bill
+    (checkpoint overhead + expected rework + expected restart, see
+    :func:`repro.launch.plan_grid.plan_grid`) into the ranked step times.
     """
     grid = plan_grid(cfg, hw, [chips], [batch], seq=seq,
                      algorithms=algorithms, pod_size=pod_size, max_pp=max_pp,
                      max_ep=max_ep, interleave=interleave,
                      zero_stages=zero_stages, remat=remat,
-                     check_capacity=check_capacity)
+                     check_capacity=check_capacity,
+                     goodput=goodput, failure=failure)
     return grid.plans()
 
 
@@ -255,6 +273,9 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
     zeroed = any(p.zero_stage > 0 for p in plans)
     capped = any(p.hbm_bytes > 0 for p in plans)
     misfit = any(not p.fits for p in plans)
+    # a goodput-priced plan always carries a nonzero Young/Daly interval
+    # (inf under an infinite MTBF); the healthy path leaves the default 0.0
+    gooded = any(p.ckpt_interval_s != 0.0 for p in plans)
     head = (f"{'rank':>4} {'mesh':>12} "
             + (f"{'pp':>3} {'mb':>4} " if piped else "")
             + (f"{'ep':>3} " if eped else "")
@@ -262,6 +283,7 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
             + f"{'algo':>10} {'t_comp ms':>9} "
             f"{'t_mem ms':>9} {'t_net ms':>9} {'step ms':>9} "
             + (f"{'band ms':>19} " if banded else "")
+            + (f"{'gp%':>6} " if gooded else "")
             + (f"{'hbm GB':>7} " if capped else "")
             + (f"{'fit':>4} " if misfit else "")
             + f"{'links':>9} {'bottleneck':>10} {'peak%':>6}")
@@ -280,6 +302,7 @@ def format_plan_table(plans: Sequence[MeshPlan]) -> str:
             f"{_fmt_ms(p.t_compute)} {_fmt_ms(p.t_memory)} "
             f"{_fmt_ms(p.t_network)} {_fmt_ms(p.runtime)} "
             + band
+            + (f"{100 * p.goodput:5.1f}% " if gooded else "")
             + (f"{p.hbm_used_gb:7.1f} " if capped else "")
             + (f"{'yes' if p.fits else 'NO':>4} " if misfit else "")
             + f"{link:>9} {p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
@@ -292,11 +315,13 @@ def format_grid_table(grid: PlanGrid, top: int = 1) -> str:
     ranked = top > 1
     zeroed = any(z > 0 for z in grid.zero_stages)
     capped = grid.hbm_capacity_bytes > 0
+    gooded = grid.goodput is not None
     head = (f"{'chips':>6} {'batch':>7} "
             + (f"{'rank':>4} " if ranked else "")
             + f"{'mesh':>14} {'mb':>4} "
             + (f"{'z':>2} " if zeroed else "")
             + f"{'algo':>10} {'step ms':>9} "
+            + (f"{'gp%':>6} " if gooded else "")
             + (f"{'hbm GB':>7} " if capped else "")
             + f"{'bottleneck':>10} {'peak%':>6}")
     lines = [head, "-" * len(head)]
@@ -309,6 +334,7 @@ def format_grid_table(grid: PlanGrid, top: int = 1) -> str:
                     + f"{p.mesh:>14} {p.microbatches:>4} "
                     + (f"{p.zero_stage:>2} " if zeroed else "")
                     + f"{p.algo_label:>10} {_fmt_ms(p.runtime)} "
+                    + (f"{100 * p.goodput:5.1f}% " if gooded else "")
                     + (f"{p.hbm_used_gb:7.1f} " if capped else "")
                     + f"{p.bottleneck:>10} {100 * p.peak_fraction:5.1f}%")
     return "\n".join(lines)
@@ -349,6 +375,20 @@ def _capacity_dict(grid: PlanGrid) -> dict:
         "pruned_fraction": grid.pruned_fraction,
         "min_zero_to_fit": grid.min_zero_to_fit.tolist(),
     }
+
+
+def _failure_json(goodput: bool,
+                  failure: Optional[FailureModel]) -> dict:
+    """The ``failure`` block of ``--json`` output (empty when healthy).
+    An infinite MTBF serializes as ``null`` to keep the JSON strict."""
+    if not goodput:
+        return {}
+    import math
+    fm = failure if failure is not None else FailureModel()
+    return {"failure": {
+        "mtbf_chip_s": (fm.mtbf_chip_s
+                        if math.isfinite(fm.mtbf_chip_s) else None),
+        "restart_s": fm.restart_s, "reshard_s": fm.reshard_s}}
 
 
 def _parse_grid(arg: Optional[str], name: str) -> Optional[List[int]]:
@@ -450,6 +490,22 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                     help="keep candidates exceeding the spec's "
                          "hbm_capacity_bytes (marked fit=NO) instead of "
                          "pruning them — the what-if view")
+    ap.add_argument("--goodput", action="store_true",
+                    help="price failures into the ranking: amortized "
+                         "checkpoint + rework + restart seconds (Young/Daly "
+                         "cadence over the spec's ckpt_bw) are added to each "
+                         "candidate's step time; without --mtbf-hours the "
+                         "MTBF is infinite and the ranking is unchanged")
+    ap.add_argument("--mtbf-hours", type=float, default=None,
+                    help="per-chip mean time between failures, hours "
+                         "(implies --goodput); the mesh fails chips x "
+                         "faster")
+    ap.add_argument("--restart-s", type=float, default=60.0,
+                    help="seconds from failure to training again "
+                         "(respawn + checkpoint read-back; default 60)")
+    ap.add_argument("--reshard-s", type=float, default=30.0,
+                    help="extra elastic-reshard seconds charged per "
+                         "restart (default 30)")
     ap.add_argument("--algo", default="auto",
                     choices=sorted(collectives.ALGORITHM_ALIASES)
                     + list(collectives.ALGORITHMS) + ["auto", "all"],
@@ -521,6 +577,14 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         if not zero_stages:
             ap.error("--zero is empty")
     check_capacity = not args.no_capacity_check
+    goodput = args.goodput or args.mtbf_hours is not None
+    failure = None
+    if args.mtbf_hours is not None:
+        if args.mtbf_hours <= 0:
+            ap.error(f"--mtbf-hours must be > 0, got {args.mtbf_hours}")
+        failure = FailureModel.from_mtbf_hours(
+            args.mtbf_hours, restart_s=args.restart_s,
+            reshard_s=args.reshard_s)
 
     if grid_mode:
         try:
@@ -534,7 +598,8 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                              zero_stages=zero_stages,
                              remat=args.remat,
                              check_capacity=check_capacity,
-                             explain=args.explain)
+                             explain=args.explain,
+                             goodput=goodput, failure=failure)
         except (ValueError, KeyError) as e:
             print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
             return 2
@@ -565,6 +630,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                 "zero_stages": list(grid.zero_stages),
                 "remat": grid.remat,
                 "capacity": _capacity_dict(grid),
+                **_failure_json(goodput, failure),
                 "n_candidates": grid.n_candidates,
                 "flip_points": flips,
                 "hardware": {"source": "calibrated" if args.calibrated
@@ -584,6 +650,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                  if args.interleave > 1 else "")
               + (f", zero={args.zero}" if args.zero != "0" else "")
               + (", remat" if args.remat else "")
+              + ((f", goodput (mtbf {args.mtbf_hours:g} h/chip)"
+                  if args.mtbf_hours is not None else ", goodput")
+                 if goodput else "")
               + f" ({grid.n_candidates} candidates, one pass)")
         if grid.hbm_capacity_bytes > 0 and grid.check_capacity \
                 and grid.n_pruned.sum():
@@ -605,7 +674,8 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                          interleave=args.interleave,
                          zero_stages=zero_stages,
                          remat=args.remat, check_capacity=check_capacity,
-                         explain=args.explain)
+                         explain=args.explain,
+                         goodput=goodput, failure=failure)
         plans = grid.plans()
         flips = flip_points(cfg, hw, args.chips, batch=batch,
                             pod_size=args.pod_size)
@@ -627,6 +697,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             "zero_stages": list(grid.zero_stages),
             "remat": grid.remat,
             "capacity": _capacity_dict(grid),
+            **_failure_json(goodput, failure),
             "flip_points": flips,
             "hardware": {"source": "calibrated" if args.calibrated
                          else list_hardware().get(hw.name, "datasheet"),
@@ -645,7 +716,10 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
           + (f", interleave={args.interleave}" if args.interleave > 1
              else "")
           + (f", zero={args.zero}" if args.zero != "0" else "")
-          + (", remat" if args.remat else ""))
+          + (", remat" if args.remat else "")
+          + ((f", goodput (mtbf {args.mtbf_hours:g} h/chip)"
+              if args.mtbf_hours is not None else ", goodput")
+             if goodput else ""))
     print(format_plan_table(shown))
     if args.algo in ("all", "auto"):
         print()
@@ -665,9 +739,14 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     zero_note = f", ZeRO-{best.zero_stage}" if best.zero_stage else ""
     ep_note = (f", ep{best.ep} (dispatch a2a on {best.ep_link})"
                if best.ep > 1 else "")
+    good_note = (f", goodput {100 * best.goodput:.1f}% "
+                 f"(ckpt {best.ckpt_overhead_s * 1e3:.3f} + rework "
+                 f"{best.rework_s * 1e3:.3f} + restart "
+                 f"{best.restart_s * 1e3:.3f} ms/step)"
+                 if best.ckpt_interval_s != 0.0 else "")
     print(f"\nbest: {best.mesh} ({best.algo_label}) -> "
           f"{best.runtime * 1e3:.3f} ms/step, {best.bottleneck}-bound"
-          f"{zero_note}{ep_note}{bubble}{band}")
+          f"{zero_note}{ep_note}{bubble}{band}{good_note}")
     if grid.hbm_capacity_bytes > 0:
         cap_gb = grid.hbm_capacity_bytes / 1e9
         note = (f"capacity: best uses {best.hbm_used_gb:.1f} of "

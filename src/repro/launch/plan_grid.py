@@ -102,6 +102,8 @@ from repro.core.hardware import HardwareSpec, get_hardware
 from repro.distributed import collectives
 from repro.launch import memory as memory_mod
 from repro.obs import trace
+from repro.resilience.failures import FailureModel
+from repro.resilience import failures as failures_mod
 
 if TYPE_CHECKING:  # jax-backed; planning itself is numpy-only
     from repro.models.common import ModelConfig
@@ -132,7 +134,9 @@ class MeshPlan:
     t_compute: float
     t_memory: float
     t_network: float             # α–β time, per-axis links (+ pipeline bubble)
-    runtime: float               # projected step time (bound)
+    runtime: float               # projected step time (bound); under
+    #                              goodput planning the failure overhead
+    #                              terms are folded in (effective step time)
     bottleneck: str
     peak_fraction: float
     net_steps: float = 0.0       # serialized hops across all axes
@@ -155,6 +159,12 @@ class MeshPlan:
     ep: int = 1                  # expert-parallel axis (1 = no ep axis)
     ep_link: str = "ici"         # link the ep dispatch/combine a2a rides
     vstages: int = 1             # interleaved-1F1B virtual stages per chip
+    goodput: float = 1.0         # delivered share of wall clock (1.0 when
+    #                              failures are unmodeled or MTBF = inf)
+    ckpt_overhead_s: float = 0.0  # per-step amortized checkpoint write
+    rework_s: float = 0.0        # per-step expected replayed work
+    restart_s: float = 0.0       # per-step expected restart + reshard
+    ckpt_interval_s: float = 0.0  # Young/Daly τ* (0 when failure-free)
 
     @property
     def chips(self) -> int:
@@ -414,6 +424,17 @@ class PlanGrid:
     prune_reasons: Optional[Dict[Tuple[int, int], Dict[str, int]]] = None
     #                                    ^ (ci, bi) -> enumeration prune counts
 
+    # failure-aware goodput overlay — populated only under goodput=True
+    # (repro.resilience.failures); `runtime` then carries the overhead
+    # terms additively: runtime = max(t_C, t_M, t_N) + ckpt + rework +
+    # restart, which is what flips rankings toward smaller meshes
+    failure: Optional[FailureModel] = None
+    goodput: Optional[np.ndarray] = None
+    ckpt_overhead_s: Optional[np.ndarray] = None
+    rework_s: Optional[np.ndarray] = None
+    restart_s: Optional[np.ndarray] = None
+    ckpt_interval_s: Optional[np.ndarray] = None
+
     @property
     def n_candidates(self) -> int:
         return int(self.runtime.size)
@@ -471,7 +492,17 @@ class PlanGrid:
             fits=bool(self.fits[i]), remat=self.remat,
             ep=int(self.ep[i]),
             ep_link=POD_LINK if self.ep_pod[i] else "ici",
-            vstages=int(self.vstages[i]))
+            vstages=int(self.vstages[i]),
+            goodput=(1.0 if self.goodput is None
+                     else float(self.goodput[i])),
+            ckpt_overhead_s=(0.0 if self.ckpt_overhead_s is None
+                             else float(self.ckpt_overhead_s[i])),
+            rework_s=(0.0 if self.rework_s is None
+                      else float(self.rework_s[i])),
+            restart_s=(0.0 if self.restart_s is None
+                       else float(self.restart_s[i])),
+            ckpt_interval_s=(0.0 if self.ckpt_interval_s is None
+                             else float(self.ckpt_interval_s[i])))
 
     def plans(self, chips: Optional[int] = None,
               batch: Optional[int] = None) -> List[MeshPlan]:
@@ -757,8 +788,9 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
               pod_size: Optional[int] = None, max_pp: int = 1,
               max_ep: int = 1, interleave: int = 1,
               zero_stages: Sequence[int] = (0,), remat: bool = False,
-              check_capacity: bool = True,
-              explain: bool = False) -> PlanGrid:
+              check_capacity: bool = True, explain: bool = False,
+              goodput: bool = False,
+              failure: Optional[FailureModel] = None) -> PlanGrid:
     """Evaluate every (dp × tp × pp × ep) × m × zero × algorithm × batch
     × chips candidate in one broadcast pass.
 
@@ -794,6 +826,18 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     the priced numbers — every array the default path returns is
     bit-identical either way.
 
+    ``goodput=True`` prices failures on top of the healthy step
+    (``repro.resilience.failures``): each candidate's persisted
+    checkpoint bytes (params + optimizer states under its ZeRO/tp/pp/ep
+    sharding) over ``hw.ckpt_bw`` give its checkpoint cost, the Young/Daly
+    interval sets the cadence, and the amortized per-step overheads —
+    checkpoint write, expected rework, expected restart — are *added to*
+    ``runtime`` before ranking, so a smaller mesh with a cheaper failure
+    bill can beat the healthy winner.  ``failure`` supplies the mesh
+    failure statistics (default: infinite per-chip MTBF, under which
+    every overhead term is exactly 0.0 and the ranking is bit-identical
+    to ``goodput=False``).
+
     Every pass runs under named trace spans (``plan_grid`` →
     ``enumerate`` / ``feasibility`` / ``price_collectives`` /
     ``sweep_classify``; see :mod:`repro.obs.trace`) that are no-ops
@@ -806,7 +850,8 @@ def plan_grid(cfg: ModelConfig, hw: Union[HardwareSpec, str],
             cfg, hw, chips_list, batch_list, seq=seq, algorithms=algorithms,
             pod_size=pod_size, max_pp=max_pp, max_ep=max_ep,
             interleave=interleave, zero_stages=zero_stages,
-            remat=remat, check_capacity=check_capacity, explain=explain)
+            remat=remat, check_capacity=check_capacity, explain=explain,
+            goodput=goodput, failure=failure)
         if trace.enabled():
             sp.set(n_enumerated=grid.n_enumerated,
                    n_candidates=grid.n_candidates,
@@ -821,8 +866,9 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
                     seq: int, algorithms: Sequence[str],
                     pod_size: Optional[int], max_pp: int, max_ep: int,
                     interleave: int, zero_stages: Sequence[int],
-                    remat: bool, check_capacity: bool,
-                    explain: bool) -> PlanGrid:
+                    remat: bool, check_capacity: bool, explain: bool,
+                    goodput: bool = False,
+                    failure: Optional[FailureModel] = None) -> PlanGrid:
     if isinstance(hw, str):
         hw = get_hardware(hw)
     if not chips_list or not batch_list:
@@ -858,11 +904,15 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
     with trace.span("plan_grid.feasibility") as sp:
         capacity = float(hw.hbm_capacity_bytes)
         batch_arr = np.asarray(batch_list, dtype=np.float64)
-        hbm = memory_mod.training_working_set(
+        ws = memory_mod.training_working_set(
             cfg, batch=batch_arr[cand["batch_idx"]], seq=seq,
             dp=cand["dp"], tp=cand["tp"], pp=cand["pp"], ep=cand["ep"],
             microbatches=cand["microbatches"], zero_stage=cand["zero"],
-            remat=remat).total
+            remat=remat)
+        hbm = ws.total
+        # checkpoint bytes ride along so the goodput overlay (if any)
+        # prices each surviving candidate's own sharded persisted state
+        persisted = ws.persisted + np.zeros_like(hbm)
         fits = hbm <= capacity if capacity > 0 else \
             np.ones(hbm.shape, dtype=bool)
         if check_capacity and capacity > 0 and not fits.all():
@@ -878,6 +928,7 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
                                       zero_stages, max_ep=max_ep)
             cand = {k: v[fits] for k, v in cand.items()}
             hbm = hbm[fits]
+            persisted = persisted[fits]
             fits = np.ones(hbm.shape, dtype=bool)
         min_zero_to_fit = np.full(point_shape, np.iinfo(np.int64).max)
         np.minimum.at(min_zero_to_fit,
@@ -1080,6 +1131,24 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
 
     attained = np.where(res.runtime > 0,
                         sweep_mod._safe_div(flops_step, res.runtime), 0.0)
+
+    # --- failure-aware goodput overlay (goodput=True only) ------------------
+    # Folds the amortized failure bill into the effective step time the
+    # ranking sees.  Every overhead term is exactly +0.0 under an infinite
+    # MTBF, so the default FailureModel keeps runtime (and therefore the
+    # committed plan goldens) bit-identical.
+    runtime = res.runtime
+    fmodel = goodput_arr = ckpt_ov_s = rework_arr_s = restart_arr_s = None
+    interval_arr_s = None
+    if goodput:
+        fmodel = failure if failure is not None else FailureModel()
+        with trace.span("plan_grid.goodput", n_candidates=int(dp.size)):
+            (ckpt_ov_s, rework_arr_s, restart_arr_s, interval_arr_s,
+             goodput_arr) = failures_mod.goodput_terms(
+                res.runtime, persisted, dp * tp * pp * ep,
+                ckpt_bw=hw.ckpt_bw, model=fmodel)
+        runtime = res.runtime + ckpt_ov_s + rework_arr_s + restart_arr_s
+
     err = max(float(hw.model_rel_error), 0.0)
     return PlanGrid(
         cfg_name=cfg.name, hardware=hw.name,
@@ -1103,11 +1172,14 @@ def _plan_grid_impl(cfg: ModelConfig, hw: Union[HardwareSpec, str],
         net_steps=dp_steps + m * tp_steps_mb + m * pp_steps_mb
         + m * ep_steps_mb,
         t_compute=res.t_compute, t_memory=res.t_memory,
-        t_network=res.t_network, runtime=res.runtime,
+        t_network=res.t_network, runtime=runtime,
         bottleneck=res.bottleneck,
         peak_fraction=sweep_mod._safe_div(attained, hw.peak_flops),
-        runtime_lo=np.maximum(res.runtime * (1.0 - err), 0.0),
-        runtime_hi=res.runtime * (1.0 + err),
+        runtime_lo=np.maximum(runtime * (1.0 - err), 0.0),
+        runtime_hi=runtime * (1.0 + err),
         hbm_bytes=hbm, fits=fits, n_enumerated=n_enumerated,
         n_pruned=n_pruned, min_zero_to_fit=min_zero_to_fit,
-        explain_terms=explain_terms, prune_reasons=prune_reasons)
+        explain_terms=explain_terms, prune_reasons=prune_reasons,
+        failure=fmodel, goodput=goodput_arr, ckpt_overhead_s=ckpt_ov_s,
+        rework_s=rework_arr_s, restart_s=restart_arr_s,
+        ckpt_interval_s=interval_arr_s)

@@ -345,6 +345,7 @@ class Calibration:
             compute_eff=self.compute_eff,
             vmem_bytes=self.base.vmem_bytes,
             hbm_capacity_bytes=self.base.hbm_capacity_bytes,
+            ckpt_bw=self.base.ckpt_bw,
         )
 
     # ---- model-vs-measured error --------------------------------------------
@@ -412,6 +413,7 @@ class Calibration:
             "link_alphas": dict(self.link_alphas),
             "vmem_bytes": self.base.vmem_bytes,
             "hbm_capacity_bytes": self.base.hbm_capacity_bytes,
+            "ckpt_bw": self.base.ckpt_bw,
             "sources": dict(self.sources),
             "datasheet": {"peak_flops": self.base.peak_flops,
                           "hbm_bw": self.base.hbm_bw,

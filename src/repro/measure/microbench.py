@@ -32,10 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.ridgeline import WorkUnit
-from repro.measure.timers import TimingStats, time_callable
+from repro.measure.timers import (TimingStats, block_until_ready,
+                                  time_callable)
 from repro.obs import trace
 
 #: bench categories, also used by calibrate.py to split fit vs validation
@@ -133,6 +136,59 @@ class Measurement:
             meta=tuple(sorted(d.get("meta", {}).items())))
 
 
+#: transient bench failures (allocator pressure bursts, backend runtime
+#: hiccups) get this many retries before the suite gives up on the bench
+_BENCH_RETRIES = 2
+#: backoff base between bench retries: base · 2^(k−1), deterministically
+#: jittered per bench name so parallel suites desynchronize
+_BENCH_BACKOFF_S = 0.05
+#: cooperative per-bench wall budget: a cold probe call projects the full
+#: median-of-k run, and repeats are clamped to fit the budget (floor 1) —
+#: one mispriced bench can no longer eat the whole CI timing budget
+_BENCH_TIMEOUT_S = 30.0
+
+#: the retryable class — runtime/backend errors, not programming errors
+#: (a ValueError from bad shapes would fail identically on every retry)
+_TRANSIENT = (RuntimeError, OSError, MemoryError)
+
+
+def _guarded_stats(name: str, fn, *, repeats: int, warmup: int,
+                   retries: int = _BENCH_RETRIES,
+                   timeout_s: float = _BENCH_TIMEOUT_S,
+                   span=None) -> TimingStats:
+    """``time_callable`` with bounded retry and a per-bench budget guard.
+
+    The guard is cooperative (it cannot interrupt a hung kernel): a timed
+    probe call — which doubles as extra warmup — projects the cost of the
+    full ``warmup + repeats`` run, and the repeat count is clamped so the
+    bench fits ``timeout_s``.  The probe is a *cold* call (it may carry
+    compilation), so clamping is conservative: a bench is only cut when
+    even optimistic accounting cannot fit it.
+    """
+    for attempt in range(retries + 1):
+        try:
+            t0 = time.monotonic()
+            block_until_ready(fn())
+            probe_s = time.monotonic() - t0
+            r = repeats
+            if timeout_s > 0 and probe_s * (warmup + repeats) > timeout_s:
+                r = max(1, int(timeout_s / probe_s) - warmup)
+                trace.count("bench.repeats_clamped", 1)
+                if span is not None:
+                    span.set(repeats_clamped=r, probe_s=probe_s)
+            return time_callable(fn, repeats=r, warmup=warmup)
+        except _TRANSIENT:  # noqa: PERF203
+            if attempt >= retries:
+                raise
+            trace.count("bench.retries", 1)
+            # deterministic per-bench jitter: crc32 of the name spreads
+            # concurrent suites without any mutable RNG state
+            jitter = 1.0 + 0.1 * ((zlib.crc32(name.encode()) % 256) / 255.0
+                                  - 0.5)
+            time.sleep(_BENCH_BACKOFF_S * 2.0 ** attempt * jitter)
+    raise AssertionError("unreachable")  # pragma: no cover
+
+
 def _measure(name: str, fn, work: WorkUnit, category: str, *,
              repeats: int, warmup: int = 2,
              meta: Tuple[Tuple[str, str], ...] = ()) -> Measurement:
@@ -141,8 +197,8 @@ def _measure(name: str, fn, work: WorkUnit, category: str, *,
     # span args, so a calibration trace shows where the suite spent time
     with trace.span(f"bench.{work.name}", category=category,
                     repeats=repeats, **dict(meta)) as sp:
-        stats: TimingStats = time_callable(fn, repeats=repeats,
-                                           warmup=warmup)
+        stats: TimingStats = _guarded_stats(work.name, fn, repeats=repeats,
+                                            warmup=warmup, span=sp)
         sp.set(median_s=stats.median, best_s=stats.best)
     return Measurement(
         work=work, seconds=stats.median, best_seconds=stats.best,
@@ -319,9 +375,9 @@ def train_step_bench(batch: int = 64, width: int = 256, layers: int = 3, *,
     work = _hlo_work_unit(f"train_step_mlp_b{batch}_w{width}x{layers}",
                           compiled)
     with trace.span(f"bench.{work.name}", category="step",
-                    kind="train_step", repeats=repeats):
-        stats = time_callable(lambda: jitted(state, batch_arrs),
-                              repeats=repeats, warmup=2)
+                    kind="train_step", repeats=repeats) as sp:
+        stats = _guarded_stats(work.name, lambda: jitted(state, batch_arrs),
+                               repeats=repeats, warmup=2, span=sp)
     return Measurement(work=work, seconds=stats.median, category="step",
                        rel_spread=stats.rel_spread,
                        backend=jax.default_backend(),
@@ -347,9 +403,10 @@ def serve_step_bench(batch: int = 8, max_len: int = 64, *,
     compiled = jitted.lower(params, tok, cache, pos).compile()
     work = _hlo_work_unit(f"serve_step_smollm_b{batch}", compiled)
     with trace.span(f"bench.{work.name}", category="step",
-                    kind="serve_step", repeats=repeats):
-        stats = time_callable(lambda: jitted(params, tok, cache, pos),
-                              repeats=repeats, warmup=2)
+                    kind="serve_step", repeats=repeats) as sp:
+        stats = _guarded_stats(work.name,
+                               lambda: jitted(params, tok, cache, pos),
+                               repeats=repeats, warmup=2, span=sp)
     return Measurement(work=work, seconds=stats.median, category="step",
                        rel_spread=stats.rel_spread,
                        backend=jax.default_backend(),

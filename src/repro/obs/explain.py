@@ -31,6 +31,7 @@ CLI surface: ``python -m repro.launch.plan ... --explain [--json]``.
 from __future__ import annotations
 
 import json
+import math
 from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 
 if TYPE_CHECKING:
@@ -127,6 +128,21 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
                 "ep_dispatch_alpha": net["ep"]["alpha_steps"],
                 "ep_dispatch_bytes": net["ep"]["bytes_over_bw"],
             }
+        goodput_rec = {}
+        if grid.goodput is not None:
+            # goodput pricing folded the failure bill into runtime, so the
+            # breakdown gains the three amortized terms to keep summing to
+            # the (effective) step time the ranking used
+            breakdown["ckpt_overhead_s"] = float(grid.ckpt_overhead_s[i])
+            breakdown["rework_s"] = float(grid.rework_s[i])
+            breakdown["restart_s"] = float(grid.restart_s[i])
+            goodput_rec = {"goodput": {
+                "fraction": float(grid.goodput[i]),
+                "ckpt_interval_s": float(grid.ckpt_interval_s[i]),
+                "ckpt_overhead_s": float(grid.ckpt_overhead_s[i]),
+                "rework_s": float(grid.rework_s[i]),
+                "restart_s": float(grid.restart_s[i]),
+            }}
         out.append({
             "mesh": (f"dp{dp}xtp{tp}" + (f"xpp{pp}" if pp > 1 else "")
                      + (f"xep{ep}" if ep > 1 else "")),
@@ -150,6 +166,7 @@ def explain_candidates(grid: "PlanGrid", chips: Optional[int] = None,
             "pipeline_bubble": {"fill": fill,
                                 "fraction": ramp / fill,
                                 "seconds": bubble_s},
+            **goodput_rec,
             "breakdown": breakdown,
         })
     return out
@@ -198,6 +215,15 @@ def explain_dict(grid: "PlanGrid") -> Dict:
             "n_pruned": int(grid.n_pruned.sum()),
             "pruned_fraction": float(grid.pruned_fraction),
         },
+        # only a goodput-priced grid carries a failure model; the healthy
+        # path keeps the committed explain goldens key-for-key identical
+        **({"failure": {
+            "mtbf_chip_s": (float(grid.failure.mtbf_chip_s)
+                            if math.isfinite(grid.failure.mtbf_chip_s)
+                            else None),
+            "restart_s": float(grid.failure.restart_s),
+            "reshard_s": float(grid.failure.reshard_s),
+        }} if grid.goodput is not None and grid.failure is not None else {}),
         "points": [explain_point(grid, c, b)
                    for c in grid.chips_list for b in grid.batch_list],
     }

@@ -1,0 +1,45 @@
+"""Failure-aware planning and fault-injection for the repro stack.
+
+Three layers, mirroring the model↔measurement discipline everywhere else:
+
+* :mod:`repro.resilience.failures` — the analytic side: mesh MTBF,
+  checkpoint cost, Young/Daly cadence, and the amortized per-step goodput
+  overheads ``plan_grid --goodput`` folds into the ranking.  NumPy-only.
+* :mod:`repro.resilience.faults` — deterministic seeded fault plans
+  (preemptions, link flaps, stragglers, checkpoint corruption).
+* :mod:`repro.resilience.harness` — replays a fault plan through the
+  resilient training runner and measures the goodput actually delivered,
+  to be compared against the analytic prediction.
+* :mod:`repro.resilience.degraded` — the restart path after a hardware
+  loss: re-plan on the surviving chips, restore the checkpoint onto the
+  new mesh.
+
+Importing the package pulls only the numpy-backed layers (analytic
+kernels + fault plans); the jax-backed harness and degraded-restart glue
+stay behind their own module imports.
+"""
+from repro.resilience.failures import (  # noqa: F401
+    FailureModel,
+    ckpt_time_s,
+    failure_overhead_terms,
+    goodput_fraction,
+    goodput_terms,
+    mesh_mtbf_s,
+    young_daly_interval_s,
+)
+from repro.resilience.faults import (  # noqa: F401
+    FaultEvent,
+    FaultPlan,
+)
+
+__all__ = [
+    "FailureModel",
+    "FaultEvent",
+    "FaultPlan",
+    "ckpt_time_s",
+    "failure_overhead_terms",
+    "goodput_fraction",
+    "goodput_terms",
+    "mesh_mtbf_s",
+    "young_daly_interval_s",
+]

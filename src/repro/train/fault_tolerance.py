@@ -15,10 +15,17 @@
     consumes (on real fleets: re-schedule the slow host / exclude it at the
     next elastic restart).  Detection must live in the runner because only
     the runner sees wall time; mitigation is a callback.
+  * exponential backoff with jitter between retries — a fleet restarting
+    in lockstep after a shared-fate failure (power event, storage blip)
+    would hammer the checkpoint store; each retry waits
+    ``backoff_base_s · 2^(k−1)`` capped at ``backoff_max_s``, with a
+    seeded ±``backoff_jitter`` spread so replicas desynchronize
+    deterministically under test.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -36,6 +43,11 @@ class RunnerConfig:
     max_retries: int = 3
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.2
+    # retry backoff: base · 2^(k−1) seconds before the k-th retry of a
+    # step, capped at the max, jittered ±jitter fraction (0 base = none)
+    backoff_base_s: float = 0.1
+    backoff_max_s: float = 5.0
+    backoff_jitter: float = 0.1
 
 
 @dataclasses.dataclass
@@ -47,17 +59,21 @@ class StragglerEvent:
 
 class ResilientRunner:
     def __init__(self, train_step: Callable, checkpointer: Checkpointer,
-                 cfg: RunnerConfig = RunnerConfig(),
+                 cfg: Optional[RunnerConfig] = None,
                  on_straggler: Optional[Callable[[StragglerEvent], None]] = None,
                  failure_hook: Optional[Callable[[int], None]] = None):
         self.train_step = train_step
         self.ckpt = checkpointer
-        self.cfg = cfg
+        # RunnerConfig is mutable, so a shared default instance would leak
+        # one runner's tweaks into every later runner; build per-instance
+        self.cfg = cfg if cfg is not None else RunnerConfig()
         self.on_straggler = on_straggler
         self.failure_hook = failure_hook   # tests inject failures here
         self.stragglers: List[StragglerEvent] = []
         self._ewma: Optional[float] = None
         self._warmup = True
+        # fixed seed: backoff jitter must replay identically under test
+        self._backoff_rng = random.Random(0x5EED)
 
     def resume_or_init(self, state):
         """Restore the latest committed checkpoint if one exists."""
@@ -65,7 +81,20 @@ class ResilientRunner:
         if latest is None:
             return state, 0
         restored, step = self.ckpt.restore(state)
+        # the first step after a restore re-traces/compiles (new buffer
+        # donation pattern) — re-arm the EWMA warm-up skip so that step is
+        # not flagged as a straggler
+        self._warmup = True
         return restored, step
+
+    def _backoff(self, retries: int) -> float:
+        """Seconds to wait before the ``retries``-th retry (jittered)."""
+        base = self.cfg.backoff_base_s
+        if base <= 0.0:
+            return 0.0
+        wait = min(base * 2.0 ** (retries - 1), self.cfg.backoff_max_s)
+        return wait * (1.0 + self.cfg.backoff_jitter
+                       * self._backoff_rng.uniform(-1.0, 1.0))
 
     def run(self, state, stream, n_steps: int,
             start_step: Optional[int] = None) -> Tuple[Any, List[Dict]]:
@@ -110,6 +139,9 @@ class ResilientRunner:
                         retries, last_failed_step = 1, step
                     if retries > self.cfg.max_retries:
                         raise
+                    wait_s = self._backoff(retries)
+                    if wait_s > 0.0:
+                        time.sleep(wait_s)
                     self.ckpt.wait()
                     state, step = self.resume_or_init(state)
             if trace.enabled():

@@ -76,6 +76,8 @@ class TrainStepConfig:
 
 
 def build_train_step(cfg: ModelConfig, optimizer,
+                     # shared default instance is safe: the dataclass is
+                     # frozen, so no caller can mutate it for everyone
                      ts_cfg: TrainStepConfig = TrainStepConfig()):
     loss_fn = make_loss_fn(cfg)
 

@@ -39,3 +39,12 @@ def empty_suppression(step_s, wire_bytes):
 def justified_suppression(step_s, wire_bytes):
     # a reasoned suppression silences the mismatch (round-trip test)
     return step_s + wire_bytes  # unit: ignore[fixture: demonstrates a reasoned suppression]
+
+
+def goodput_plus_seconds(goodput, rework_s):
+    return goodput + rework_s                   # -> unit-mismatch (goodput)
+
+
+def seconds_masquerading_as_goodput(rework_s):
+    goodput = rework_s                          # -> unit-bad-assign
+    return goodput

@@ -446,7 +446,11 @@ GOLDEN_PLAN_KEYS = {"mesh", "chips", "algo_label", "dp", "tp", "algorithm",
                     "zero_stage", "hbm_bytes", "hbm_used_gb", "fits",
                     "remat",
                     # ISSUE 9: ep axis + interleaved virtual stages
-                    "ep", "ep_link", "vstages"}
+                    "ep", "ep_link", "vstages",
+                    # ISSUE 10: failure-aware goodput terms (exact zeros /
+                    # goodput 1.0 when failures are unmodeled)
+                    "goodput", "ckpt_overhead_s", "rework_s", "restart_s",
+                    "ckpt_interval_s"}
 GOLDEN_FLIP_KEYS = {"axis", "group_size", "link", "bandwidth", "alpha",
                     "flip_payload_bytes", "small_payload_algo",
                     "large_payload_algo"}

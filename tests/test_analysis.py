@@ -124,6 +124,13 @@ def test_units_rules_fire_on_fixture():
             "unit-bad-return", "bad-suppression"} <= rules
     # add, sub, and compare mismatches are distinct sites
     assert sum(f.rule == "unit-mismatch" for f in findings) >= 3
+    # the goodput contract: a dimensionless delivered-fraction never mixes
+    # with (or gets assigned from) seconds
+    assert any(f.rule == "unit-mismatch"
+               and "dimensionless" in f.message.lower()
+               and "seconds" in f.message.lower() for f in findings)
+    assert any(f.rule == "unit-bad-assign"
+               and "goodput" in f.message.lower() for f in findings)
     # the reasoned suppression round-trips into the suppressed list
     assert any("reasoned suppression" in s["suppressed_reason"]
                for s in suppressed)

@@ -62,6 +62,87 @@ class TestRoundtrip:
             ck.restore(_tree())
 
 
+class TestIntegrity:
+    """Corruption of *committed* checkpoints: detect, quarantine, fall back."""
+
+    def _shard(self, root, step):
+        d = os.path.join(str(root), f"step_{step:09d}")
+        name = next(n for n in sorted(os.listdir(d))
+                    if n.startswith("shard_"))
+        return os.path.join(d, name)
+
+    def test_truncated_shard_skipped_by_latest_step(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree())
+        ck.save(2, _tree())
+        with open(self._shard(tmp_path, 2), "w"):
+            pass                              # truncate to zero bytes
+        assert ck.latest_step() == 1
+        restored, step = ck.restore(_tree())
+        assert step == 1
+
+    def test_bitflip_quarantined_and_fallback(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree())
+        ck.save(2, _tree())
+        path = self._shard(tmp_path, 2)
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:          # silent bitrot mid-file
+            f.seek(size // 2)
+            f.write(b"\xff\x00\xff\x00")
+        assert ck.latest_step() == 2          # cheap scan cannot see it
+        restored, step = ck.restore(_tree())
+        assert step == 1                      # crc32 caught it, fell back
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                     _tree(), restored)
+        # the bad step is quarantined (kept as evidence), never rescanned
+        assert any(".quarantined_" in n for n in os.listdir(tmp_path))
+        assert ck.latest_step() == 1
+
+    def test_explicit_corrupt_step_raises(self, tmp_path):
+        from repro.checkpoint.checkpointer import CheckpointCorruptionError
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree())
+        ck.save(2, _tree())
+        path = self._shard(tmp_path, 2)
+        with open(path, "r+b") as f:
+            f.write(b"\x00\x00\x00\x00")
+        # the caller asked for step 2's exact bytes: substituting step 1
+        # silently would be worse than failing
+        with pytest.raises(CheckpointCorruptionError):
+            ck.restore(_tree(), step=2)
+
+    def test_all_corrupt_raises_not_loops(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, _tree())
+        with open(self._shard(tmp_path, 1), "r+b") as f:
+            f.write(b"\x00\x00\x00\x00")
+        with pytest.raises(FileNotFoundError):
+            ck.restore(_tree())
+
+    def test_quarantined_dirs_do_not_break_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        ck.save(1, _tree())
+        with open(self._shard(tmp_path, 1), "r+b") as f:
+            f.write(b"\x00\x00\x00\x00")
+        with pytest.raises(FileNotFoundError):
+            ck.restore(_tree())               # quarantines step 1
+        for s in (2, 3, 4):
+            ck.save(s, _tree())               # _gc walks the dir again
+        assert ck.latest_step() == 4
+
+    def test_checksums_recorded_in_manifest(self, tmp_path):
+        import json as json_mod
+        ck = Checkpointer(str(tmp_path))
+        ck.save(5, _tree())
+        d = os.path.join(str(tmp_path), "step_000000005")
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json_mod.load(f)
+        assert meta["checksums"]              # one entry per shard
+        for name in meta["checksums"]:
+            assert os.path.exists(os.path.join(d, name))
+
+
 @pytest.mark.slow
 class TestRestartDeterminism:
     """train(2N) == train(N) -> save -> restore -> train(N): bitwise."""

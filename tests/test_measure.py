@@ -509,3 +509,62 @@ def test_calibrate_cli_smoke(tmp_path):
     plans = plan_mod.plan(get_config("dlrm-mlp"), spec, 4, batch=512)
     assert plans and math.isfinite(plans[0].runtime)
     assert plans[0].runtime > 0
+
+
+# --- bench retry + budget guard (PR 10) --------------------------------------
+class TestGuardedStats:
+    def test_transient_failure_retried(self):
+        from repro.measure.microbench import _guarded_stats
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise RuntimeError("allocator burst")
+            return calls["n"]
+
+        stats = _guarded_stats("flaky", flaky, repeats=3, warmup=0,
+                               retries=2, timeout_s=0.0)
+        assert len(stats.samples) == 3
+        # 2 failed probes + 1 good probe + 3 timed repeats
+        assert calls["n"] == 6
+
+    def test_bounded_retries_reraise(self):
+        from repro.measure.microbench import _guarded_stats
+
+        def broken():
+            raise RuntimeError("dead backend")
+
+        with pytest.raises(RuntimeError, match="dead backend"):
+            _guarded_stats("broken", broken, repeats=3, warmup=0, retries=1)
+
+    def test_programming_errors_not_retried(self):
+        from repro.measure.microbench import _guarded_stats
+        calls = {"n": 0}
+
+        def bad_shapes():
+            calls["n"] += 1
+            raise ValueError("shape mismatch")
+
+        with pytest.raises(ValueError):
+            _guarded_stats("bad", bad_shapes, repeats=3, warmup=0, retries=3)
+        assert calls["n"] == 1
+
+    def test_budget_clamps_repeats(self):
+        import time as time_mod
+
+        from repro.measure.microbench import _guarded_stats
+
+        def slow():
+            time_mod.sleep(0.02)
+
+        # probe ~0.02s, budget 0.1s -> far fewer than 50 samples kept
+        stats = _guarded_stats("slow", slow, repeats=50, warmup=1,
+                               timeout_s=0.1)
+        assert 1 <= len(stats.samples) <= 5
+
+    def test_no_budget_keeps_all_repeats(self):
+        from repro.measure.microbench import _guarded_stats
+        stats = _guarded_stats("fast", lambda: 1.0, repeats=5, warmup=1,
+                               timeout_s=0.0)
+        assert len(stats.samples) == 5

@@ -785,6 +785,100 @@ class TestCapacityFeasibility:
         assert unconstrained.runtime < best.runtime
 
 
+# --- failure-aware goodput (ISSUE 10) -----------------------------------------
+
+
+class TestGoodput:
+    def test_inf_mtbf_bit_identical_to_pr4_golden(self):
+        """ISSUE 10 acceptance: ``goodput=True`` with the default
+        (infinite-MTBF) failure model reproduces the committed PR 4
+        golden bit-for-bit — every overhead term is exactly +0.0."""
+        g = _golden("plan_pr4_dlrm_mlp_c16.json")
+        plans = plan(_cfg("dlrm-mlp"), TPU_V5E, 16, batch=g["batch"],
+                     goodput=True)
+        _assert_bit_identical(plans, g)
+        for p in plans:
+            assert p.goodput == 1.0
+            assert p.ckpt_overhead_s == 0.0
+            assert p.rework_s == 0.0 and p.restart_s == 0.0
+
+    def test_inf_mtbf_runtime_array_identical(self):
+        cfg = _cfg("dlrm-mlp")
+        g0 = pg.plan_grid(cfg, TPU_V5E, [16, 64], [4096], max_pp=2)
+        g1 = pg.plan_grid(cfg, TPU_V5E, [16, 64], [4096], max_pp=2,
+                          goodput=True)
+        assert np.array_equal(g0.runtime, g1.runtime)
+        assert np.array_equal(g0.runtime_lo, g1.runtime_lo)
+        assert np.array_equal(g0.runtime_hi, g1.runtime_hi)
+        assert np.all(g1.goodput == 1.0)
+
+    def test_pinned_goodput_flip_golden(self):
+        """The ISSUE 10 acceptance golden: dlrm-mlp at batch 4096, 1 h
+        per-chip MTBF.  Healthy, 64 chips out-rank 16; once the failure
+        bill is priced (64 chips fail 4x as often and pay a bigger
+        restart bill) the 16-chip mesh wins — pinned bit-for-bit."""
+        from repro.launch.plan import _plan_dict
+        from repro.resilience import FailureModel
+        g = _golden("plan_pr10_goodput_flip.json")
+        fm = FailureModel(mtbf_chip_s=g["failure"]["mtbf_chip_s"],
+                          restart_s=g["failure"]["restart_s"],
+                          reshard_s=g["failure"]["reshard_s"])
+        grid = pg.plan_grid(_cfg(g["arch"]), TPU_V5E, g["chips_grid"],
+                            g["batch_grid"], max_pp=g["max_pp"],
+                            goodput=True, failure=fm)
+        for pt in g["points"]:
+            got = _plan_dict(grid.best(pt["chips"], pt["batch"]))
+            for key, want in pt["best"].items():
+                assert got[key] == want, (pt["chips"], key, want, got[key])
+        # the flip itself: priced, the small mesh beats the big one...
+        priced = grid.best_runtime_grid().ravel()
+        assert priced[0] < priced[1]
+        # ...which inverts the healthy ranking
+        healthy = pg.plan_grid(
+            _cfg(g["arch"]), TPU_V5E, g["chips_grid"], g["batch_grid"],
+            max_pp=g["max_pp"]).best_runtime_grid().ravel()
+        assert healthy[1] < healthy[0]
+
+    def test_goodput_monotone_in_mtbf(self):
+        """Shorter per-chip MTBF can only lower goodput and raise the
+        effective step time, elementwise across the whole grid."""
+        from repro.resilience import FailureModel
+        cfg = _cfg("dlrm-mlp")
+        prev_good, prev_rt = None, None
+        for hours in (100.0, 10.0, 1.0):
+            g = pg.plan_grid(cfg, TPU_V5E, [16, 64], [512], max_pp=2,
+                             goodput=True,
+                             failure=FailureModel.from_mtbf_hours(hours))
+            if prev_good is not None:
+                assert np.all(g.goodput <= prev_good)
+                assert np.all(g.runtime >= prev_rt)
+            prev_good, prev_rt = g.goodput, g.runtime
+
+    def test_goodput_needs_ckpt_bw(self):
+        """A spec that does not know its checkpoint bandwidth refuses to
+        price goodput rather than dividing by zero."""
+        from repro.resilience import FailureModel
+        bare = HardwareSpec("bare", peak_flops=197e12, hbm_bw=819e9,
+                            net_bw=50e9)
+        assert bare.ckpt_bw == 0.0
+        with pytest.raises(ValueError, match="ckpt_bw"):
+            pg.plan_grid(_cfg("dlrm-mlp"), bare, [16], [512],
+                         goodput=True,
+                         failure=FailureModel.from_mtbf_hours(1.0))
+
+    def test_goodput_cli_json(self, capsys):
+        from repro.launch.plan import main
+        assert main(["--arch", "dlrm-mlp", "--chips", "16",
+                     "--mtbf-hours", "100", "--json"]) == 0
+        d = json.loads(capsys.readouterr().out)
+        assert d["failure"]["mtbf_chip_s"] == 100.0 * 3600.0
+        best = d["best"]
+        assert 0.0 < best["goodput"] < 1.0
+        assert best["runtime"] == pytest.approx(
+            best["t_network"] + best["ckpt_overhead_s"]
+            + best["rework_s"] + best["restart_s"], rel=1e-12)
+
+
 # --- plan_grid API ------------------------------------------------------------
 
 
@@ -948,3 +1042,20 @@ class TestBenchGridRegression:
     def test_capacity_cut_actually_prunes(self, feasibility_stats):
         assert 0.0 < feasibility_stats["prune_fraction"] < 1.0, \
             feasibility_stats
+
+    @pytest.fixture()
+    def goodput_stats(self, bench):
+        stats = bench.get("planner_goodput")
+        if not stats:
+            pytest.skip("baseline predates goodput planning")
+        return stats
+
+    def test_goodput_grid_still_clears_1e5_candidates_per_s(
+            self, goodput_stats):
+        """The Young/Daly overlay is a handful of broadcast kernels on
+        already-sized arrays and must not cost the grid its raw-speed
+        win — the ISSUE 10 CI pin."""
+        assert goodput_stats["candidates_per_s"] >= 1e5, goodput_stats
+
+    def test_goodput_actually_prices_failures(self, goodput_stats):
+        assert 0.0 < goodput_stats["min_goodput"] < 1.0, goodput_stats
